@@ -1,0 +1,23 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from the dry-run
+records (run after a sweep)."""
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import markdown_table
+
+exp = pathlib.Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+text = exp.read_text()
+table = markdown_table("single")
+marker = "<!-- ROOFLINE_TABLE_SINGLE -->"
+if marker in text:
+    text = text.replace(marker, marker + "\n\n" + table)
+else:
+    # replace the previously injected table (between marker-begin lines)
+    text = re.sub(r"(<!-- ROOFLINE_BEGIN -->).*?(<!-- ROOFLINE_END -->)",
+                  r"\1\n" + table + r"\n\2", text, flags=re.S)
+exp.write_text(text)
+print("injected", len(table.splitlines()), "rows")

@@ -1,0 +1,39 @@
+"""Benchmark driver — one function per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Modeled rows are tagged `modeled`
+inside `derived`; wall-clock rows on this host are tagged `measured`.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    # allow running as `python -m benchmarks.run` from the repo root
+    sys.path.insert(0, "src")
+    from benchmarks import paper_figures as pf
+    from benchmarks import roofline
+
+    sections = [
+        ("fig7", pf.fig7_queue_probability),
+        ("fig8", pf.fig8_resource_saving),
+        ("fig9", pf.fig9_search_latency),
+        ("fig10", pf.fig10_scaleout),
+        ("table5", pf.table5_energy),
+        ("fig11_fig12", pf.fig11_fig12_ralm),
+        ("fig13", pf.fig13_accelerator_ratio),
+        ("roofline", roofline.roofline_rows),
+    ]
+    print("name,us_per_call,derived")
+    for _, fn in sections:
+        try:
+            rows = fn()
+        except Exception as e:  # keep the suite running; report the failure
+            rows = [dict(name=f"{fn.__name__}/ERROR", us_per_call=0.0,
+                         derived=str(e)[:120].replace(",", ";"))]
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end RALM serving (paper Fig. 3 workflow) with batched requests.
+
+Demonstrates the paper's central behavioural claim at desk scale: an
+UNTRAINED tiny LM + a retrieval datastore reproduces memorized sequences,
+because the knowledge lives in the database, not the weights (knowledge
+editing without retraining, paper §1).
+
+    PYTHONPATH=src python examples/serve_ralm.py [--disaggregate]
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.chamvs import ChamVSConfig
+from repro.core.generate import RetrievalEngine, generate
+from repro.core.ivfpq import IVFPQConfig, build_shards, train_ivfpq
+from repro.core.rag import RagConfig
+from repro.models import transformer as tf
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--disaggregate", action="store_true")
+args = ap.parse_args()
+
+# tiny decoder RALM (paper Dec-S family, reduced)
+import dataclasses
+cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+params = tf.init_params(jax.random.PRNGKey(0), cfg)
+
+# a corpus with deterministic structure: token t -> (3t+1) mod 64
+rng = np.random.default_rng(0)
+start = rng.integers(0, 64, size=(64,))
+seqs = [start]
+for _ in range(31):
+    seqs.append((3 * seqs[-1] + 1) % 64)
+corpus = np.stack(seqs, axis=1).astype(np.int32)
+
+# datastore: hidden state of every prefix -> next token (kNN-LM, interval 1)
+_, _, hidden = tf.forward(params, cfg, tokens=jnp.asarray(corpus),
+                          mode="train", return_hidden=True)
+keys = np.asarray(hidden[:, :-1].astype(jnp.float32)).reshape(-1, cfg.d_model)
+payload = jnp.asarray(corpus[:, 1:].reshape(-1))
+icfg = IVFPQConfig(dim=cfg.d_model, nlist=8, m=8, list_cap=512)
+db = train_ivfpq(jax.random.PRNGKey(1), jnp.asarray(keys), icfg,
+                 kmeans_iters=8)
+shards = build_shards(db, keys, icfg, num_shards=2)
+ccfg = ChamVSConfig(ivfpq=icfg, nprobe=4, k=8, backend="ref")
+print(f"datastore: {keys.shape[0]} vectors, 2 memory nodes, "
+      f"k'={ccfg.k_prime(2)}")
+
+rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999, temperature=1.0)
+
+if args.disaggregate and len(jax.devices()) >= 2:
+    from repro.core.coordinator import DisaggregatedRuntime
+    rt = DisaggregatedRuntime(cfg, rag, params, db, shards, ccfg,
+                              payload_tokens=payload, lm_devices=1,
+                              ret_devices=1)
+    outs = rt.generate_pipelined([jnp.asarray(corpus[:4, :8]),
+                                  jnp.asarray(corpus[4:8, :8])], steps=8)
+    out = outs[0]
+    print(f"disaggregated pools: LM={rt.lm_mesh.devices.size} dev, "
+          f"retrieval={rt.ret_mesh.devices.size} dev")
+else:
+    engine = RetrievalEngine(params=db, shards=shards, cfg=ccfg,
+                             payload_tokens=payload)
+    out = np.asarray(generate(params, cfg, rag, jnp.asarray(corpus[:4, :8]),
+                              steps=8, engine=engine))
+
+acc = (out[:, 8:16] == corpus[:4, 8:16]).mean()
+print(f"retrieval-augmented continuation accuracy: {acc:.2f} "
+      f"(untrained LM alone would be ~{1/64:.3f})")
+print("generated :", out[0, 8:16].tolist())
+print("ground tru:", corpus[0, 8:16].tolist())

@@ -1,0 +1,86 @@
+"""Train a retrieval-augmented encoder-decoder (RETRO-style, paper EncDec
+family) end-to-end: the training batch carries retrieved-chunk embeddings
+for the shallow encoder; the decoder cross-attends (paper §2.1 category 1).
+
+Default runs a ~100M-param class model (paper EncDec-S) at reduced size for
+a few hundred CPU steps with checkpointing + crash-safe resume; pass
+``--full`` on real hardware for the exact Table-2 config.
+
+    PYTHONPATH=src python examples/train_retro.py --steps 200
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import TrainController
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--ckpt-dir", default="/tmp/retro_ckpt")
+args = ap.parse_args()
+
+spec = get_arch("encdec_s")
+cfg = spec.model if args.full else spec.reduced
+rag = spec.rag
+print(f"model: {cfg.name} ({cfg.param_count()/1e6:.2f}M params, "
+      f"{cfg.n_enc_layers}-layer encoder + {cfg.n_layers}-layer decoder, "
+      f"retrieval interval {rag.interval}, K={rag.k})")
+
+ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+params = tf.init_params(jax.random.PRNGKey(0), cfg)
+opt = adamw.init_opt_state(params, ocfg)
+
+base = SyntheticTokens(DataConfig(seq_len=32 if not args.full else 512,
+                                  global_batch=4 if not args.full else 64,
+                                  vocab_size=cfg.vocab_size))
+enc_len = 16 if not args.full else rag.k * rag.chunk_len
+
+
+class RetroData:
+    """Wraps the token stream with retrieved-chunk embeddings (here the
+    chunk embeddings are derived deterministically from the labels —
+    an informative retrieval oracle, so the cross-attention pathway is
+    actually trained to use the encoder)."""
+
+    def __init__(self, src):
+        self.src = src
+
+    def host_batch(self, step, host_id=0, num_hosts=1):
+        b = self.src.host_batch(step, host_id, num_hosts)
+        rng = np.random.Generator(np.random.Philox(key=99, counter=step))
+        B = b["tokens"].shape[0]
+        # chunk embeddings correlated with the labels' prefix
+        sig = b["labels"][:, :enc_len] % 31
+        emb = (np.take(np.eye(32, cfg.d_model, dtype=np.float32), sig, 0)
+               + 0.1 * rng.normal(size=(B, enc_len, cfg.d_model)))
+        b["enc_embeds"] = emb.astype(np.float32)
+        return b
+
+
+def train_step(params, opt_state, batch):
+    batch = dict(batch, enc_embeds=batch["enc_embeds"].astype(jnp.bfloat16))
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.lm_loss(p, cfg, batch))(params)
+    params, opt_state, m = adamw.apply_updates(params, grads, opt_state, ocfg)
+    m["loss"] = loss
+    return params, opt_state, m
+
+
+ctl = TrainController(jax.jit(train_step), RetroData(base), args.ckpt_dir,
+                      ckpt_every=50)
+params, opt = ctl.run(params, opt, total_steps=args.steps)
+losses = [m["loss"] for m in ctl.metrics_log]
+k = max(len(losses) // 10, 1)
+print(f"loss: {np.mean(losses[:k]):.4f} (first {k}) -> "
+      f"{np.mean(losses[-k:]):.4f} (last {k})")
+assert np.mean(losses[-k:]) < np.mean(losses[:k]), "did not learn"
+print("checkpoints in", args.ckpt_dir)

@@ -1,0 +1,151 @@
+"""Sharded checkpoint/restore with async snapshots and elastic resharding.
+
+Layout: one directory per step containing a ``manifest.json`` (flat key ->
+shape/dtype) and one ``.npy`` per leaf. Writes go to a temp dir + atomic
+rename, so a crash mid-save never corrupts the latest valid checkpoint —
+restore always picks the newest *complete* step directory (the paper-scale
+requirement: a 1000-node job must survive any single write being killed).
+
+Elastic resharding: leaves are saved as full (unsharded) arrays; restore
+device_puts them under the *current* mesh's NamedShardings, so a job
+checkpointed on N devices resumes on M devices unchanged. For 405B-scale
+states a real deployment would write per-shard files; the format keeps a
+``shard_id`` field for that extension.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve dtype names incl. ml_dtypes (bfloat16 saves as raw void)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    """Synchronous atomic checkpoint of a pytree."""
+    root = pathlib.Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten(tree)
+    manifest = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        logical = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16 etc): raw bytes
+            logical = arr.dtype.name
+            arr = arr.view(np.uint8).reshape(arr.shape + (-1,)) \
+                if arr.ndim else arr.view(np.uint8)
+            arr = np.ascontiguousarray(arr)
+        np.save(tmp / fname, arr)
+        manifest[key] = dict(file=fname, shape=list(flat[key].shape),
+                             dtype=logical, shard_id=0)
+    (tmp / "manifest.json").write_text(json.dumps(
+        dict(step=step, leaves=manifest), indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(path: str | pathlib.Path) -> Optional[int]:
+    root = pathlib.Path(path)
+    if not root.exists():
+        return None
+    steps = []
+    for d in root.iterdir():
+        if d.name.startswith("step_") and (d / "manifest.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(path: str | pathlib.Path, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedShardings for elastic placement on the current mesh."""
+    root = pathlib.Path(path)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key, like_leaf in flat_like.items():
+        meta = manifest[key]
+        arr = np.load(d / meta["file"])
+        dt = _np_dtype(meta["dtype"])
+        if str(arr.dtype) != meta["dtype"]:   # raw-byte ml_dtypes payload
+            arr = arr.view(dt).reshape(tuple(meta["shape"]))
+        want = tuple(getattr(like_leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != {want}")
+        sh = flat_sh.get(key)
+        out[key] = (jax.device_put(arr, sh) if sh is not None
+                    else jax.numpy.asarray(arr))
+    # unflatten back into the structure of `like`
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [out[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with training: snapshot to host sync (cheap),
+    write in a background thread. ``wait()`` before exit/next save."""
+
+    def __init__(self, path: str | pathlib.Path, keep: int = 3):
+        self.path = pathlib.Path(path)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def _write():
+            save(self.path, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in self.path.iterdir()
+                       if d.name.startswith("step_"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(d, ignore_errors=True)

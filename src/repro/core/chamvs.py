@@ -1,0 +1,260 @@
+"""ChamVS — the distributed, accelerated vector search engine (paper §3–§4).
+
+Maps the paper's disaggregated architecture onto a JAX device mesh:
+
+  * **Memory nodes** (paper: FPGA + DRAM) = shards of the PQ database laid out
+    over the ``db_axes`` mesh axes (default ``("pod", "data")``). Every IVF
+    list is striped evenly across all shards (partition scheme 1, §4.3), so
+    any nprobe selection produces balanced scan work.
+  * **Index scanner** (paper: GPU ChamVS.idx) = replicated centroid scan +
+    top-nprobe, executed where the queries live.
+  * **Query broadcast / result aggregation** (paper: CPU coordinator, steps
+    3–9) = ``all_gather`` of the query batch onto every shard, local
+    ADC + truncated top-k' per shard, ``all_gather`` of the k' survivors,
+    exact top-K merge — all in-graph over ICI instead of TCP/IP.
+
+Work parallelism: on top of DB sharding, the query batch is split over the
+``query_axis`` (default ``"model"``) so the LUT construction + ADC scan for
+different queries run on different TP columns of the same DB shard row.
+
+The ADC + K-selection backends are pluggable:
+  ``backend="ref"``    — pure-jnp gather ADC (paper's CPU flavor; also what the
+                          multi-pod dry-run lowers, since Pallas does not
+                          compile on the CPU backend).
+  ``backend="pallas"`` — the near-memory Pallas kernels (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import ivfpq
+from repro.core.approx_topk_math import truncated_queue_len
+from repro.core.ivfpq import IVFPQConfig, IVFPQParams, IVFPQShard
+
+
+@dataclasses.dataclass(frozen=True)
+class ChamVSConfig:
+    """Serve-time configuration of the search engine."""
+
+    ivfpq: IVFPQConfig
+    nprobe: int = 32
+    k: int = 100
+    eps: float = 0.01             # approx-queue failure budget (paper: 1%)
+    backend: str = "ref"          # "ref" | "pallas"
+    interpret: bool = True        # Pallas interpret mode (CPU container)
+    num_l1_blocks: int = 16       # producers per shard for the approx queue
+
+    def k_prime(self, num_shards: int) -> int:
+        """Truncated per-shard queue length (paper §4.2.2): the shards are the
+        level-one producers of the global top-K, so each only ships k' << K
+        candidates over the network. Note k' > K/num_shards always holds, so
+        the merge can always fill K slots."""
+        return min(self.k, truncated_queue_len(self.k, max(1, num_shards),
+                                               self.eps))
+
+
+# ---------------------------------------------------------------------------
+# per-shard search (runs inside shard_map; also usable standalone)
+# ---------------------------------------------------------------------------
+
+def shard_search(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray,
+                 probe_ids: jnp.ndarray, cfg: ChamVSConfig, kk: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One memory node's work: LUTs -> stream probed lists -> ADC -> top-kk.
+
+    Returns (dists [nq, kk], global_ids [nq, kk])."""
+    icfg = cfg.ivfpq
+    nq, nprobe = probe_ids.shape
+    luts = ivfpq.compute_luts(params, queries, probe_ids, icfg)  # [nq,np,m,ksub]
+    codes = shard.codes[probe_ids]                               # [nq,np,cap,m]
+    ids = shard.ids[probe_ids]                                   # [nq,np,cap]
+    lens = shard.list_len[probe_ids]                             # [nq,np]
+
+    if cfg.backend == "pallas":
+        from repro.kernels.pq_adc.ops import pq_adc_topk
+        B = nq * nprobe
+        d_l, i_l = pq_adc_topk(
+            luts.reshape(B, icfg.m, icfg.ksub),
+            codes.reshape(B, icfg.list_cap, icfg.m),
+            lens.reshape(B),
+            k=min(kk, icfg.list_cap),
+            backend="pallas", interpret=cfg.interpret)
+        # local row idx -> global vector id via the per-list id table
+        gid = jnp.take_along_axis(
+            ids.reshape(B, icfg.list_cap),
+            jnp.maximum(i_l, 0), axis=1)
+        gid = jnp.where(i_l < 0, -1, gid)
+        kcap = d_l.shape[-1]
+        d = d_l.reshape(nq, nprobe * kcap)
+        g = gid.reshape(nq, nprobe * kcap)
+    else:
+        valid = (jnp.arange(icfg.list_cap)[None, None, :] < lens[..., None])
+        d3 = ivfpq.adc_scan_ref(luts, codes)                     # [nq,np,cap]
+        d3 = jnp.where(valid, d3, jnp.inf)
+        d = d3.reshape(nq, -1)
+        g = ids.reshape(nq, -1)
+
+    neg, pos = jax.lax.top_k(-d, min(kk, d.shape[-1]))
+    out_d = -neg
+    out_i = jnp.take_along_axis(g, pos, axis=1)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    if out_d.shape[-1] < kk:  # fewer candidates than kk: pad
+        pad = kk - out_d.shape[-1]
+        out_d = jnp.pad(out_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, pad)), constant_values=-1)
+    return out_d, out_i
+
+
+def search_single(params: IVFPQParams, shards: list[IVFPQShard],
+                  queries: jnp.ndarray, cfg: ChamVSConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-process reference search over a list of shards (tests, builds)."""
+    _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
+    kk = cfg.k_prime(len(shards))
+    per = [shard_search(params, s, queries, probe_ids, cfg, kk) for s in shards]
+    return ivfpq.merge_topk(jnp.stack([p[0] for p in per]),
+                            jnp.stack([p[1] for p in per]), cfg.k)
+
+
+# ---------------------------------------------------------------------------
+# distributed search (shard_map over the production mesh)
+# ---------------------------------------------------------------------------
+
+def stack_shards(shards: list[IVFPQShard]) -> IVFPQShard:
+    """[S] shards -> one IVFPQShard with a leading shard axis (to be placed
+    with a sharded ``jax.device_put`` along the db axes)."""
+    return IVFPQShard(
+        codes=jnp.stack([s.codes for s in shards]),
+        ids=jnp.stack([s.ids for s in shards]),
+        list_len=jnp.stack([s.list_len for s in shards]),
+    )
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    cfg: ChamVSConfig,
+    db_axes: Tuple[str, ...] = ("data",),
+    query_axis: Optional[str] = "model",
+    nq: Optional[int] = None,
+):
+    """Build the in-graph distributed search fn for ``mesh``.
+
+    Returns ``search(params, stacked_shard, queries) -> (dists, ids)`` with
+    replicated outputs [nq, K]. ``stacked_shard`` must carry a leading shard
+    axis of size prod(mesh[a] for a in db_axes).
+
+    Work split over ``query_axis`` (the TP columns of each DB shard row):
+      * query-split — each column searches nq/qsize queries (batch serving);
+      * probe-split — when nq is not divisible (e.g. long-context batch 1),
+        each column scans nprobe/qsize of every query's probed lists; the
+        merge then spans shards x columns (more, shorter L1 queues — the
+        paper's Fig. 8 regime).
+    """
+    db_axes = tuple(a for a in db_axes if a in mesh.axis_names)
+    num_shards = 1
+    for a in db_axes:
+        num_shards *= mesh.shape[a]
+    qa = query_axis if (query_axis and query_axis in mesh.axis_names) else None
+    qsize = mesh.shape[qa] if qa else 1
+    probe_split = bool(qa) and nq is not None and (
+        nq % qsize != 0 and cfg.nprobe % qsize == 0)
+    producers = num_shards * (qsize if probe_split else 1)
+    kk = cfg.k_prime(producers)
+
+    def body(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray):
+        # shard: leading axis length 1 on this device; queries: [nq_local, D]
+        local = jax.tree.map(lambda x: x[0], shard)
+        nq_local = queries.shape[0]
+        _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
+        if probe_split:
+            npl = cfg.nprobe // qsize
+            col = jax.lax.axis_index(qa)
+            probe_ids = jax.lax.dynamic_slice_in_dim(
+                probe_ids, col * npl, npl, axis=1)
+        d, i = shard_search(params, local, queries, probe_ids, cfg, kk)
+        # aggregate over memory nodes (paper step 7-8): gather the kk
+        # survivors of every producer, then exact-merge.
+        gather_axes = db_axes + ((qa,) if probe_split else ())
+        if gather_axes:
+            d = jax.lax.all_gather(d, gather_axes, axis=0, tiled=False)
+            i = jax.lax.all_gather(i, gather_axes, axis=0, tiled=False)
+            d = d.reshape(producers, nq_local, kk)
+            i = i.reshape(producers, nq_local, kk)
+            d = d.transpose(1, 0, 2).reshape(nq_local, producers * kk)
+            i = i.transpose(1, 0, 2).reshape(nq_local, producers * kk)
+        neg, pos = jax.lax.top_k(-d, min(cfg.k, d.shape[-1]))
+        out_d = -neg
+        out_i = jnp.take_along_axis(i, pos, axis=1)
+        # un-split the query batch (it was sharded over the TP axis)
+        if qa and not probe_split:
+            out_d = jax.lax.all_gather(out_d, qa, axis=0, tiled=True)
+            out_i = jax.lax.all_gather(out_i, qa, axis=0, tiled=True)
+        return out_d, out_i
+
+    shard_spec = IVFPQShard(
+        codes=P(db_axes if db_axes else None),
+        ids=P(db_axes if db_axes else None),
+        list_len=P(db_axes if db_axes else None),
+    )
+    q_spec = P(qa) if (qa and not probe_split) else P()
+    in_specs = (
+        IVFPQParams(P(), P()),    # quantizers replicated (paper: metadata)
+        shard_spec,
+        q_spec,
+    )
+    out_specs = (P(), P())
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+
+    def search(params: IVFPQParams, stacked: IVFPQShard, queries: jnp.ndarray):
+        n = queries.shape[0]
+        if qa and not probe_split:
+            assert n % qsize == 0, (n, qsize)
+        return fn(params, stacked, queries)
+
+    return search
+
+
+def make_distributed_gather(mesh: Mesh, table_axes: Tuple[str, ...]):
+    """ID -> payload conversion against a fully sharded table (paper step 9).
+
+    ``table`` [N, ...] is sharded over ``table_axes``; ``ids`` [B, K] are
+    replicated. A naive ``table[ids]`` makes GSPMD all-gather the whole
+    table (measured 4 GB/step for the 1e9-entry token table —
+    EXPERIMENTS.md §Perf iteration 2); instead each shard gathers the ids
+    that fall in its range and a psum of the masked results (KB-scale)
+    assembles the answer."""
+    axes = tuple(a for a in table_axes if a in mesh.axis_names)
+    nsh = 1
+    for a in axes:
+        nsh *= mesh.shape[a]
+
+    def body(table, ids):
+        # flattened shard index over `axes` (row-major over the mesh dims)
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        nloc = table.shape[0]
+        lo = idx * nloc
+        rel = ids - lo
+        hit = (rel >= 0) & (rel < nloc)
+        vals = table[jnp.clip(rel, 0, nloc - 1)]
+        mask = hit.reshape(hit.shape + (1,) * (vals.ndim - hit.ndim))
+        vals = jnp.where(mask, vals, 0)
+        return jax.lax.psum(vals, axes)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes), P()), out_specs=P(), check_vma=False)

@@ -1,0 +1,71 @@
+"""Lloyd's k-means in pure JAX — substrate for IVF coarse quantizer and PQ codebooks.
+
+Used at index-build time (ChamVS.idx training). jit-compiled, static shapes,
+k-means++-style seeding via distance-weighted sampling (one pass, cheap
+approximation), empty-cluster repair by splitting the largest cluster.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sq_l2(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """[n, d] x [k, d] -> [n, k] squared L2 distances (matmul form, MXU-friendly)."""
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)            # [n, 1]
+    c2 = jnp.sum(c * c, axis=-1)                           # [k]
+    xc = x @ c.T                                           # [n, k]
+    return x2 - 2.0 * xc + c2[None, :]
+
+
+def _init_centroids(key: jax.Array, x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Distance-weighted seeding: pick one uniform seed, then sample k-1 points
+    with probability proportional to distance to the first seed (cheap single-pass
+    k-means++ approximation; exact k-means++ is O(n*k) sequential)."""
+    n = x.shape[0]
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    d = jnp.sum((x - x[first]) ** 2, axis=-1)
+    # Gumbel-top-k trick for weighted sampling without replacement.
+    logits = jnp.log(d + 1e-12)
+    g = jax.random.gumbel(k1, (n,))
+    _, idx = jax.lax.top_k(logits + g, k - 1)
+    return jnp.concatenate([x[first][None], x[idx]], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(
+    key: jax.Array, x: jnp.ndarray, k: int, iters: int = 20
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run Lloyd's algorithm. Returns (centroids [k, d], assignment [n]).
+
+    Deterministic given `key`. Handles empty clusters by re-seeding them at the
+    point farthest from its assigned centroid (largest-loss point)."""
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    cent0 = _init_centroids(key, x, k)
+
+    def step(cent, _):
+        dist = _pairwise_sq_l2(x, cent)                    # [n, k]
+        assign = jnp.argmin(dist, axis=-1)                 # [n]
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype) # [n, k]
+        counts = one_hot.sum(axis=0)                       # [k]
+        sums = one_hot.T @ x                               # [k, d]
+        new_cent = sums / jnp.maximum(counts, 1.0)[:, None]
+        # Empty-cluster repair: move empty centroids onto the globally
+        # worst-represented points (one per empty slot, by rank).
+        point_loss = jnp.min(dist, axis=-1)                # [n]
+        _, worst = jax.lax.top_k(point_loss, k)            # [k] farthest points
+        empty = counts < 0.5
+        rank = jnp.cumsum(empty.astype(jnp.int32)) - 1     # slot -> which worst pt
+        repair = x[worst[jnp.clip(rank, 0, k - 1)]]
+        new_cent = jnp.where(empty[:, None], repair, new_cent)
+        return new_cent, None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+    assign = jnp.argmin(_pairwise_sq_l2(x, cent), axis=-1)
+    return cent, assign

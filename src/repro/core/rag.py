@@ -1,0 +1,92 @@
+"""RALM integration modes (paper §2.1) — how retrieved knowledge enters the LM.
+
+Two categories, exactly as the paper classifies them:
+
+1. **Token-level, decoder-only (kNN-LM family)** [Khandelwal et al.; paper's
+   Dec-S/Dec-L, retrieval interval 1]: the last layer's hidden state is the
+   query; each database vector maps to the *next token* of its context; the
+   LM's next-token distribution is interpolated with a distance-weighted
+   distribution over retrieved next-tokens.
+
+2. **Chunk-level, encoder-decoder (RETRO family)** [Borgeaud et al.; paper's
+   EncDec-S/EncDec-L, intervals 8/64/512]: retrieved text chunks are encoded
+   by a shallow encoder and injected into the decoder via cross-attention.
+
+The vector-ID -> payload conversion (paper step 9, done by the CPU server) is
+a device-side gather from payload tables here (token table for kNN-LM, chunk
+table for RETRO); the disaggregated coordinator does the same gather on host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RagConfig:
+    mode: str = "knnlm"            # "knnlm" | "retro" | "none"
+    interval: int = 1              # retrieve every N generated tokens
+    k: int = 100                   # neighbors (paper Table 2)
+    lam: float = 0.25              # kNN-LM interpolation weight
+    temperature: float = 10.0      # kNN softmax temperature over L2^2 dists
+    chunk_len: int = 64            # RETRO chunk length (tokens per neighbor)
+
+
+def knnlm_interpolate(
+    lm_logits: jnp.ndarray,        # [B, V]
+    knn_dists: jnp.ndarray,        # [B, K] (L2^2, +inf = missing)
+    knn_tokens: jnp.ndarray,       # [B, K] int32 (-1 = missing)
+    lam: float,
+    temperature: float,
+) -> jnp.ndarray:
+    """log p = log((1-lam) softmax(lm_logits) + lam p_knn)  -> [B, V].
+
+    p_knn(w) ∝ sum_{i: tok_i = w} exp(-d_i / T)  (kNN-LM, interval-1 RALMs).
+    Invalid neighbors (inf dist / id -1) contribute zero mass; if a row has no
+    valid neighbor, the result degrades gracefully to the pure LM distribution.
+    """
+    B, V = lm_logits.shape
+    valid = (knn_tokens >= 0) & jnp.isfinite(knn_dists)
+    logw = jnp.where(valid, -knn_dists / temperature, -jnp.inf)
+    # stable softmax over the neighbor axis; rows with no valid neighbor
+    # produce weight 0 for every neighbor.
+    m = jnp.max(jnp.where(valid, logw, -jnp.inf), axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    w = jnp.where(valid, jnp.exp(logw - m), 0.0)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    has_knn = denom[:, 0] > 0
+    w = w / jnp.maximum(denom, 1e-20)                      # [B, K]
+    tok = jnp.maximum(knn_tokens, 0)
+    p_knn = jnp.zeros((B, V), jnp.float32).at[
+        jnp.arange(B)[:, None], tok].add(w.astype(jnp.float32))
+    p_lm = jax.nn.softmax(lm_logits.astype(jnp.float32), axis=-1)
+    lam_row = jnp.where(has_knn, lam, 0.0)[:, None]
+    mixed = (1.0 - lam_row) * p_lm + lam_row * p_knn
+    return jnp.log(jnp.maximum(mixed, 1e-20))
+
+
+def gather_payload(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Vector-ID -> payload (paper step 9). ids [B, K] (-1 = missing) against
+    table [N, ...]; missing ids return row 0 (callers mask by id)."""
+    return table[jnp.maximum(ids, 0)]
+
+
+def retro_neighbor_tokens(
+    chunk_table: jnp.ndarray,      # [N, chunk_len] int32
+    ids: jnp.ndarray,              # [B, K]
+) -> jnp.ndarray:
+    """Retrieved chunks for the RETRO encoder: [B, K, chunk_len]; missing
+    neighbors yield PAD (token 0) rows."""
+    toks = gather_payload(chunk_table, ids)
+    return jnp.where((ids >= 0)[..., None], toks, 0)
+
+
+def should_retrieve(step: jnp.ndarray, interval: int) -> jnp.ndarray:
+    """Paper §2.1: interval-1 RALMs retrieve every step; interval-N at every
+    Nth generated token (and always at step 0)."""
+    if interval <= 1:
+        return jnp.asarray(True)
+    return (step % interval) == 0

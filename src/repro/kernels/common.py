@@ -1,0 +1,37 @@
+"""Shared in-kernel utilities for the ChamVS Pallas kernels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def extract_topk_rows(d: jnp.ndarray, i: jnp.ndarray, k: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-batched k-smallest by iterative min-extraction (ascending).
+
+    d, i: [rows, cand] -> ([rows, k], [rows, k]).
+
+    TPU replacement for the FPGA systolic priority queue (DESIGN.md §3): k
+    rounds of (row-min, row-argmin, mask) — each round is an all-lane VPU
+    reduction, no inter-lane register shuffles. k is static and small (the
+    truncated queue length k' from the paper's binomial bound), so the loop
+    body is cheap relative to the producing scan."""
+    rows, cand = d.shape
+
+    def body(j, carry):
+        d_, out_d, out_i = carry
+        m = jnp.min(d_, axis=1)                                  # [rows]
+        p = jnp.argmin(d_, axis=1)                               # [rows]
+        val_i = jnp.take_along_axis(i, p[:, None], axis=1)[:, 0]
+        out_d = jax.lax.dynamic_update_slice_in_dim(out_d, m[:, None], j, 1)
+        out_i = jax.lax.dynamic_update_slice_in_dim(out_i, val_i[:, None], j, 1)
+        col = jax.lax.broadcasted_iota(jnp.int32, d_.shape, 1)
+        d_ = jnp.where(col == p[:, None], jnp.inf, d_)
+        return d_, out_d, out_i
+
+    out_d = jnp.full((rows, k), jnp.inf, d.dtype)
+    out_i = jnp.full((rows, k), -1, i.dtype)
+    _, out_d, out_i = jax.lax.fori_loop(0, k, body, (d, out_d, out_i))
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)

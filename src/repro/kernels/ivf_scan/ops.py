@@ -1,0 +1,30 @@
+"""Public wrapper for the fused IVF index scan."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_scan import kernel as _k
+from repro.kernels.ivf_scan import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "backend", "interpret"))
+def ivf_index_scan(queries: jnp.ndarray, centroids: jnp.ndarray, nprobe: int,
+                   backend: str = "pallas", interpret: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Select the nprobe closest IVF lists per query (ChamVS.idx).
+
+    queries [nq, D], centroids [nlist, D] -> (dists, list_ids) [nq, nprobe]."""
+    nq = queries.shape[0]
+    nlist = centroids.shape[0]
+    if backend == "ref" or nlist < 128:
+        return _ref.ref_ivf_scan(queries, centroids, nprobe)
+    if backend == "pallas":
+        tile_q = 8 if nq % 8 == 0 else (4 if nq % 4 == 0 else 1)
+        tile_c = 512 if nlist % 512 == 0 else (128 if nlist % 128 == 0 else nlist)
+        return _k.ivf_scan(queries, centroids, nprobe,
+                           tile_q=tile_q, tile_c=tile_c, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the IVF index scan kernel (ChamVS.idx, paper step 2)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_ivf_scan(queries: jnp.ndarray, centroids: jnp.ndarray, nprobe: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Brute-force L2 distances to all IVF centroids + exact top-nprobe.
+
+    queries [nq, D], centroids [nlist, D] -> (dists [nq, nprobe],
+    ids [nq, nprobe]) ascending."""
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=-1)
+    d = q2 - 2.0 * (queries @ centroids.T) + c2[None, :]
+    neg, idx = jax.lax.top_k(-d, nprobe)
+    return -neg, idx

@@ -1,0 +1,182 @@
+"""Pallas TPU kernels for PQ ADC scanning — the ChamVS near-memory engine.
+
+Two formulations (DESIGN.md §3, hardware adaptation):
+
+1. ``adc_scan``  — the *paper-faithful* unit: stream PQ codes HBM->VMEM in
+   BlockSpec tiles, per sub-space LUT lookup realized as a vectorized
+   compare-FMA over the ksub table entries (the TPU VPU has no per-lane
+   byte-addressable BRAM, so the FPGA's table lookup becomes a broadcast
+   compare+select — same streaming contract: each code tile is read once).
+   Fused epilogue: per-block truncated top-k' queue (paper §4.2.2), carried
+   in the output ref across grid steps along the scan axis.
+
+2. ``shared_scan`` — the *beyond-paper* MXU formulation: with non-residual
+   PQ, a whole query batch shares one scan of the probed-list union; the
+   LUT lookup becomes a one-hot × LUT-stack matmul
+   ``[tile_n, m*ksub] @ [m*ksub, q]`` that runs on the 128x128 systolic
+   array at full occupancy once q >= 128. This trades 2*ksub*q flops/byte
+   of MXU work for reading the codes slab exactly once for the whole batch.
+
+Both are validated against ``ref.py`` in interpret mode (tests/test_kernels_pq_adc.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# shared in-kernel helper: merge candidates into a running sorted top-k buffer
+# ---------------------------------------------------------------------------
+
+def _extract_topk(d: jnp.ndarray, i: jnp.ndarray, k: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k smallest of (d, i) by iterative min-extraction (ascending).
+
+    This is the TPU replacement for the FPGA systolic priority queue: k rounds
+    of (vector min, argmin, mask) over a VMEM-resident candidate vector —
+    all-lane parallel, no inter-lane shuffles required."""
+    def body(j, carry):
+        d_, out_d, out_i = carry
+        p = jnp.argmin(d_)
+        out_d = jax.lax.dynamic_update_index_in_dim(out_d, d_[p], j, 0)
+        out_i = jax.lax.dynamic_update_index_in_dim(out_i, i[p], j, 0)
+        d_ = d_.at[p].set(jnp.inf)
+        return d_, out_d, out_i
+
+    out_d = jnp.full((k,), jnp.inf, d.dtype)
+    out_i = jnp.full((k,), -1, i.dtype)
+    _, out_d, out_i = jax.lax.fori_loop(0, k, body, (d, out_d, out_i))
+    # +inf slots are "no candidate" — normalize their id so backends agree.
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: paper-faithful streaming ADC + fused truncated top-k' queue
+# ---------------------------------------------------------------------------
+
+def _adc_scan_kernel(len_ref, lut_ref, codes_ref, out_d_ref, out_i_ref,
+                     *, tile_n: int, m: int, ksub: int, k: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, jnp.inf)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    codes = codes_ref[0].astype(jnp.int32)                  # [tile_n, m]
+    lut = lut_ref[0]                                        # [m, ksub]
+    # LUT lookup as compare-FMA: for each sub-space j, one-hot(codes[:, j])
+    # against the iota, weighted by the LUT column. fori over m keeps the
+    # [tile_n, ksub] intermediate VMEM-resident and small.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, ksub), 1)
+
+    def body(j, acc):
+        cj = jax.lax.dynamic_slice_in_dim(codes, j, 1, axis=1)   # [tile_n, 1]
+        lj = jax.lax.dynamic_slice_in_dim(lut, j, 1, axis=0)[0]  # [ksub]
+        eq = (iota == cj).astype(lut.dtype)                       # [tile_n, ksub]
+        return acc + eq @ lj                                      # [tile_n]
+
+    dist = jax.lax.fori_loop(0, m, body, jnp.zeros((tile_n,), lut.dtype))
+
+    # padding mask: rows beyond the list's valid length get +inf
+    n_valid = len_ref[0]
+    row = t * tile_n + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)[:, 0]
+    dist = jnp.where(row < n_valid, dist, jnp.inf)
+
+    # merge tile candidates into the running truncated queue (out refs carry
+    # the queue across grid steps because their index_map ignores t)
+    cand_d = jnp.concatenate([out_d_ref[0], dist])
+    cand_i = jnp.concatenate([out_i_ref[0], row])
+    top_d, top_i = _extract_topk(cand_d, cand_i, k)
+    out_d_ref[0] = top_d
+    out_i_ref[0] = top_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def adc_scan(luts: jnp.ndarray, codes: jnp.ndarray, lens: jnp.ndarray,
+             k: int, tile_n: int = 512, interpret: bool = True
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ADC scan + local top-k' per (query, probe) batch entry.
+
+    luts:  [B, m, ksub] f32 — distance lookup tables
+    codes: [B, n, m] uint8 — PQ codes of the probed list slice (padded)
+    lens:  [B] int32 — valid prefix length per entry
+    Returns (dists [B, k], idx [B, k]) ascending; idx is the row within n.
+    """
+    B, n, m = codes.shape
+    ksub = luts.shape[-1]
+    assert n % tile_n == 0, (n, tile_n)
+    grid = (B, n // tile_n)
+    kernel = functools.partial(
+        _adc_scan_kernel, tile_n=tile_n, m=m, ksub=ksub, k=k)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, k), luts.dtype),
+        jax.ShapeDtypeStruct((B, k), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, t: (b,)),                 # lens
+            pl.BlockSpec((1, m, ksub), lambda b, t: (b, 0, 0)),    # luts
+            pl.BlockSpec((1, tile_n, m), lambda b, t: (b, t, 0)),  # codes
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(lens, luts, codes)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: beyond-paper MXU shared-scan (one-hot matmul, batched LUTs)
+# ---------------------------------------------------------------------------
+
+def _shared_scan_kernel(lut_ref, codes_ref, out_ref, *,
+                        tile_n: int, m: int, ksub: int):
+    codes = codes_ref[...].astype(jnp.int32)                  # [tile_n, m]
+    # one-hot over the joint (sub-space, centroid) axis -> [tile_n, m*ksub]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, m, ksub), 2)
+    onehot = (iota == codes[:, :, None]).astype(lut_ref.dtype)
+    onehot = onehot.reshape(tile_n, m * ksub)
+    # MXU contraction against the stacked LUTs of the whole query batch.
+    out_ref[...] = jax.lax.dot_general(
+        onehot, lut_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # [tile_n, q]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def shared_scan(luts: jnp.ndarray, codes: jnp.ndarray,
+                tile_n: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Distances of a whole query batch against one shared codes slab.
+
+    luts:  [q, m, ksub] f32 (non-residual PQ: one LUT per query)
+    codes: [n, m] uint8
+    Returns dists [n, q] f32.
+    """
+    q, m, ksub = luts.shape
+    n = codes.shape[0]
+    assert n % tile_n == 0, (n, tile_n)
+    lut_flat = luts.reshape(q, m * ksub).T                    # [m*ksub, q]
+    kernel = functools.partial(
+        _shared_scan_kernel, tile_n=tile_n, m=m, ksub=ksub)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((m * ksub, q), lambda t: (0, 0)),
+            pl.BlockSpec((tile_n, m), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, q), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.float32),
+        interpret=interpret,
+    )(lut_flat, codes)

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the PQ ADC kernels.
+
+``pq_adc_topk`` is what ChamVS calls per memory-node shard; it handles
+padding to tile multiples and exposes a ``backend`` switch:
+  * "pallas"   — the Pallas kernel (interpret mode on CPU, compiled on TPU)
+  * "ref"      — the pure-jnp oracle (also the paper's CPU-baseline flavor)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_adc import kernel as _k
+from repro.kernels.pq_adc import ref as _ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "backend", "interpret"))
+def pq_adc_topk(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    lens: jnp.ndarray,
+    k: int,
+    tile_n: int = 512,
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ADC + local top-k over a batch of probed lists.
+
+    luts [B, m, ksub] f32 | codes [B, n, m] uint8 | lens [B] int32
+    -> (dists [B, k], row_idx [B, k]) ascending.
+    """
+    B, n, m = codes.shape
+    tile_n = min(tile_n, max(128, n))
+    codes = _pad_to(codes, 1, tile_n)
+    if backend == "pallas":
+        return _k.adc_scan(luts, codes, lens, k, tile_n=tile_n,
+                           interpret=interpret)
+    if backend == "ref":
+        npad = codes.shape[1]
+        valid = jnp.arange(npad)[None, :] < lens[:, None]
+        d = jax.vmap(_ref.ref_adc)(luts, codes)
+        d = jnp.where(valid, d, jnp.inf)
+        neg, idx = jax.lax.top_k(-d, k)
+        idx = jnp.where(jnp.isinf(-neg), -1, idx)
+        return -neg, idx.astype(jnp.int32)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "backend", "interpret"))
+def pq_shared_scan(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    tile_n: int = 512,
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched-LUT shared scan: luts [q, m, ksub], codes [n, m] -> [n, q]."""
+    n = codes.shape[0]
+    tile_n = min(tile_n, max(128, n))
+    codes_p = _pad_to(codes, 0, tile_n)
+    if backend == "pallas":
+        out = _k.shared_scan(luts, codes_p, tile_n=tile_n, interpret=interpret)
+    elif backend == "ref":
+        out = _ref.ref_shared_scan(luts, codes_p).T
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out[:n]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the PQ ADC scan kernel.
+
+Semantics (paper §4.1, PQ decoding unit): given a distance lookup table
+``lut[m, ksub]`` and quantized database vectors ``codes[n, m]`` (each byte an
+address into the corresponding LUT column), produce
+``dist[n] = sum_j lut[j, codes[n, j]]``.
+
+The oracle also covers the fused local-top-k epilogue used by the kernel
+(per-block truncated queues, paper §4.2.2): ``ref_adc_topk`` returns the
+k smallest distances + their row indices, exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut: [m, ksub] f32; codes: [n, m] integer -> [n] f32 distances."""
+    n, m = codes.shape
+    gathered = jnp.take_along_axis(
+        lut.T[None, :, :],                     # [1, ksub, m]
+        codes[:, None, :].astype(jnp.int32),   # [n, 1, m]
+        axis=1,
+    )                                          # [n, 1, m]
+    return jnp.sum(gathered[:, 0, :], axis=-1)
+
+
+def ref_adc_batch(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """luts: [b, m, ksub]; codes: [b, n, m] -> [b, n]."""
+    return jax.vmap(ref_adc)(luts, codes)
+
+
+def ref_adc_topk(lut: jnp.ndarray, codes: jnp.ndarray, valid: jnp.ndarray,
+                 k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused scan + exact top-k oracle.
+
+    valid: [n] bool (padding mask). Returns (dists [k], idx [k]) ascending."""
+    d = jnp.where(valid, ref_adc(lut, codes), jnp.inf)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def ref_shared_scan(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the beyond-paper MXU shared-scan formulation.
+
+    luts: [q, m, ksub] (one LUT per query, non-residual PQ);
+    codes: [n, m] (a single scanned slab shared by all queries)
+    -> dists [q, n]."""
+    return jax.vmap(lambda lut: ref_adc(lut, codes))(luts)

@@ -1,0 +1,46 @@
+"""Public wrapper for approximate hierarchical top-k selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_topk_math import truncated_queue_len
+from repro.kernels.topk import kernel as _k
+from repro.kernels.topk import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "num_blocks", "k_prime", "eps", "backend", "interpret"))
+def approx_topk(
+    d: jnp.ndarray,
+    k: int,
+    num_blocks: int = 16,
+    k_prime: Optional[int] = None,
+    eps: float = 0.01,
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k smallest per row with truncated level-1 queues (paper §4.2.2).
+
+    If ``k_prime`` is None it is sized by the paper's binomial bound so that
+    at most ``eps`` of queries differ from exact top-k. ``num_blocks`` is the
+    number of level-1 producers (grid blocks)."""
+    B, n = d.shape
+    if k_prime is None:
+        k_prime = truncated_queue_len(k, num_blocks, eps)
+    k_prime = min(max(k_prime, 1), k)
+    # degenerate tiles: every block must hold at least k' candidates
+    if n % num_blocks != 0 or n // num_blocks < k_prime:
+        return _ref.ref_exact_topk(d, k)
+    if backend == "pallas":
+        row_tile = 8 if B % 8 == 0 else (4 if B % 4 == 0 else 1)
+        return _k.hierarchical_topk(d, k, k_prime, num_blocks,
+                                    row_tile=row_tile, interpret=interpret)
+    if backend == "ref":
+        return _ref.ref_hierarchical_topk(d, k, num_blocks, k_prime)
+    if backend == "exact":
+        return _ref.ref_exact_topk(d, k)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the approximate hierarchical top-k kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_exact_topk(d: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact k smallest per row: d [B, n] -> (dists [B,k], idx [B,k]) ascending."""
+    neg, idx = jax.lax.top_k(-d, k)
+    idx = jnp.where(jnp.isinf(-neg), -1, idx)
+    return -neg, idx
+
+
+def ref_hierarchical_topk(d: jnp.ndarray, k: int, num_blocks: int,
+                          k_prime: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle of the *approximate* semantics: per-block truncated top-k' queues
+    followed by an exact level-2 merge (paper §4.2.2). Returns what the kernel
+    should return, including the cases where truncation drops true members."""
+    B, n = d.shape
+    assert n % num_blocks == 0
+    blk = n // num_blocks
+    db = d.reshape(B, num_blocks, blk)
+    neg, pos = jax.lax.top_k(-db, k_prime)                 # [B, nb, k']
+    base = (jnp.arange(num_blocks) * blk)[None, :, None]
+    idx = pos + base
+    l1_d = (-neg).reshape(B, num_blocks * k_prime)
+    l1_i = idx.reshape(B, num_blocks * k_prime)
+    neg2, pos2 = jax.lax.top_k(-l1_d, k)
+    out_i = jnp.take_along_axis(l1_i, pos2, axis=1)
+    out_d = -neg2
+    return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)

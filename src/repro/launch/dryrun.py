@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below this line may import jax ---------------------------
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.analysis import (analyze_hlo, dominant_term, roofline_terms,
+                                   PEAK_FLOPS, HBM_BW, ICI_BW)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             with_retrieval: bool = True) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return roofline record."""
+    spec = get_arch(arch)
+    if shape in spec.skip_shapes:
+        return dict(arch=arch, shape=shape,
+                    mesh="multi" if multi_pod else "single",
+                    status="SKIP", reason=spec.skip_shapes[shape])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = spec.model
+    kind = SHAPES[shape]["kind"]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            jitted, _, _ = steps_lib.build_train_step(spec, shape, mesh)
+            p = _abstract_params(cfg)
+            opt = jax.eval_shape(
+                lambda: adamw.init_opt_state(
+                    tf.init_params(jax.random.PRNGKey(0), cfg),
+                    adamw.AdamWConfig()))
+            batch = specs_lib.train_batch_struct(spec, shape)
+            lowered = jitted.lower(p, opt, batch)
+        elif kind == "prefill":
+            jitted, _ = steps_lib.build_prefill_step(spec, shape, mesh)
+            p = _abstract_params(cfg)
+            caches = specs_lib.cache_struct(spec, shape)
+            batch = specs_lib.prefill_struct(spec, shape)
+            lowered = jitted.lower(p, caches, batch)
+        else:  # decode
+            jitted, shardings, (ccfg, structs) = steps_lib.build_serve_step(
+                spec, shape, mesh, with_retrieval=with_retrieval)
+            p = _abstract_params(cfg)
+            args = [p, structs["cache"], structs["batch"]]
+            if with_retrieval:
+                args += [structs["db_params"], structs["db_shard"],
+                         structs["payload"]]
+                if "proj" in structs:
+                    args.append(structs["proj"])
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = analyze_hlo(compiled.as_text())
+    terms = roofline_terms(cost)
+    dom = dominant_term(terms)
+
+    # MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N*D for inference, with
+    # N = active params; D = tokens processed by this step.
+    n_active = cfg.active_param_count()
+    sh = SHAPES[shape]
+    if kind == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        model_flops = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = sh["global_batch"]          # one token per sequence
+        model_flops = 2.0 * n_active * tokens
+    n_dev = mesh.devices.size
+    model_flops_per_dev = model_flops / n_dev
+    total = max(sum(terms.values()), 1e-30)
+
+    rec = dict(
+        arch=arch, shape=shape, mesh="multi" if multi_pod else "single",
+        status="OK", kind=kind, n_devices=int(n_dev),
+        retrieval=bool(with_retrieval and kind == "decode"),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        hlo_flops_per_dev=cost.flops,
+        hlo_bytes_per_dev=cost.bytes,
+        collective_bytes_per_dev=cost.collective_bytes,
+        collectives={k: v for k, v in cost.coll.items()},
+        compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+        collective_s=terms["collective_s"], dominant=dom,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops_per_dev / cost.flops
+                            if cost.flops else 0.0),
+        roofline_fraction=(max(terms.values()) / total),
+        arg_bytes_per_dev=mem.argument_size_in_bytes,
+        temp_bytes_per_dev=mem.temp_size_in_bytes,
+        out_bytes_per_dev=mem.output_size_in_bytes,
+        xla_cost_flops=ca.get("flops", 0.0),
+        xla_cost_bytes=ca.get("bytes accessed", 0.0),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--no-retrieval", action="store_true")
+    ap.add_argument("--paper-archs", action="store_true",
+                    help="also run the paper's Table-2 RALM configs")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = (list_archs(include_paper=args.paper_archs)
+             if args.arch == "all" else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                out = pathlib.Path(args.out) if args.out else (
+                    RESULTS / f"dryrun_{arch}_{shape}_{m}.json")
+                if out.exists() and not args.force:
+                    print(f"[skip-cached] {arch} {shape} {m}")
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {m} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=(m == "multi"),
+                                   with_retrieval=not args.no_retrieval)
+                except Exception as e:  # a failing cell is a bug — record it
+                    rec = dict(arch=arch, shape=shape, mesh=m,
+                               status="FAIL", error=str(e)[-2000:],
+                               tb=traceback.format_exc()[-4000:])
+                out.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                if status == "OK":
+                    print(f"  OK compile={rec['compile_s']}s "
+                          f"dom={rec['dominant']} "
+                          f"flops/dev={rec['hlo_flops_per_dev']:.3e} "
+                          f"bytes/dev={rec['hlo_bytes_per_dev']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_dev']:.3e}",
+                          flush=True)
+                else:
+                    print(f"  {status}: {rec.get('reason', rec.get('error', ''))[:300]}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

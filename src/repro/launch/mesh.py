@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 (data, model) = 256 chips (TPU v5e pod slice).
+    Multi-pod: 2x16x16 (pod, data, model) = 512 chips; the leading "pod"
+    axis is the slow inter-pod hop (DCN), which is why gradient compression
+    and the ChamVS k'-truncated result aggregation target it."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices=None, data: int = 1, model: int = 1,
+                  pod: int = 1):
+    """Arbitrary mesh over an explicit device list (tests, disaggregated
+    pools)."""
+    import numpy as np
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = pod * data * model
+    assert len(devices) >= n, (len(devices), n)
+    arr = np.array(devices[:n])
+    if pod > 1:
+        return jax.sharding.Mesh(arr.reshape(pod, data, model),
+                                 ("pod", "data", "model"))
+    return jax.sharding.Mesh(arr.reshape(data, model), ("data", "model"))

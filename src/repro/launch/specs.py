@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct stand-ins for every model/engine input — the dry-run
+lowers against these (no device allocation).
+
+The vector database is described at the paper's scale (1e9 vectors, Table 3)
+with per-arch dimensionality: query dim = min(d_model, 1024) (larger models
+project the hidden state down before search, standard OPQ-style practice;
+the projection is a serve-time parameter), m = query_dim / 16 (the paper's
+dsub=16 across all datasets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchSpec
+from repro.core.chamvs import ChamVSConfig
+from repro.core.ivfpq import IVFPQConfig, IVFPQParams, IVFPQShard
+from repro.models.config import ModelConfig
+from repro.models.sharding import dp_axes
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeDBSpec:
+    """Deployment-scale retrieval database description (paper Table 3)."""
+    n_vectors: int = 1_000_000_000
+    nlist: int = 32768
+    nprobe: int = 32
+    nbits: int = 8
+
+    def for_model(self, cfg: ModelConfig, num_shards: int, k: int
+                  ) -> ChamVSConfig:
+        dq = min(cfg.d_model, 1024)
+        m = max(dq // 16, 4)
+        per = self.n_vectors / self.nlist / num_shards
+        cap = int(-(-per * 1.10 // 128) * 128)  # +10% imbalance headroom
+        icfg = IVFPQConfig(dim=dq, nlist=self.nlist, m=m, nbits=self.nbits,
+                           residual=True, list_cap=max(cap, 128))
+        return ChamVSConfig(ivfpq=icfg, nprobe=self.nprobe, k=k,
+                            backend="ref")
+
+
+def db_struct(ccfg: ChamVSConfig, num_shards: int
+              ) -> Tuple[IVFPQParams, IVFPQShard]:
+    i = ccfg.ivfpq
+    params = IVFPQParams(
+        coarse_centroids=S((i.nlist, i.dim), jnp.float32),
+        codebooks=S((i.m, i.ksub, i.dsub), jnp.float32))
+    shard = IVFPQShard(
+        codes=S((num_shards, i.nlist, i.list_cap, i.m), jnp.uint8),
+        ids=S((num_shards, i.nlist, i.list_cap), jnp.int32),
+        list_len=S((num_shards, i.nlist), jnp.int32))
+    return params, shard
+
+
+def db_specs(mesh: Mesh) -> Tuple[Any, Any]:
+    """Partition specs for (IVFPQParams, stacked IVFPQShard)."""
+    dp = dp_axes(mesh)
+    return (IVFPQParams(P(), P()),
+            IVFPQShard(codes=P(dp), ids=P(dp), list_len=P(dp)))
+
+
+def num_db_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# per-(arch, shape) input structs
+# ---------------------------------------------------------------------------
+
+def train_batch_struct(spec: ArchSpec, shape_name: str) -> Dict[str, Any]:
+    sh = SHAPES[shape_name]
+    B, T = sh["global_batch"], sh["seq_len"]
+    cfg = spec.model
+    batch: Dict[str, Any] = {"labels": S((B, T), jnp.int32)}
+    if cfg.frontend == "vision":
+        # patch embeddings from the stub frontend + M-RoPE position streams
+        batch["embeds"] = S((B, T, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = S((3, B, T), jnp.int32)
+    else:
+        batch["tokens"] = S((B, T), jnp.int32)
+    if cfg.arch == "encdec":
+        enc_len = 512 if cfg.frontend == "audio" else spec.rag.k * spec.rag.chunk_len
+        batch["enc_embeds"] = S((B, enc_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return batch
+
+
+def train_batch_specs(spec: ArchSpec, shape_name: str, mesh: Mesh
+                      ) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    cfg = spec.model
+    out: Dict[str, Any] = {"labels": P(dp, None)}
+    if cfg.frontend == "vision":
+        out["embeds"] = P(dp, None, None)
+        out["positions"] = P(None, dp, None)
+    else:
+        out["tokens"] = P(dp, None)
+    if cfg.arch == "encdec":
+        out["enc_embeds"] = P(dp, None, None)
+    return out
+
+
+def prefill_struct(spec: ArchSpec, shape_name: str) -> Dict[str, Any]:
+    sh = SHAPES[shape_name]
+    B, T = sh["global_batch"], sh["seq_len"]
+    cfg = spec.model
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        batch["embeds"] = S((B, T, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = S((3, B, T), jnp.int32)
+    else:
+        batch["tokens"] = S((B, T), jnp.int32)
+        batch["positions"] = S((B, T), jnp.int32)
+    if cfg.arch == "encdec":
+        enc_len = 512 if cfg.frontend == "audio" else spec.rag.k * spec.rag.chunk_len
+        batch["enc_embeds"] = S((B, enc_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_struct(spec: ArchSpec, shape_name: str) -> Dict[str, Any]:
+    sh = SHAPES[shape_name]
+    B = sh["global_batch"]
+    cfg = spec.model
+    batch: Dict[str, Any] = {
+        "token": S((B, 1), jnp.int32),
+        "position": S((B,), jnp.int32),
+    }
+    if cfg.arch == "encdec":
+        enc_len = 512 if cfg.frontend == "audio" else spec.rag.k * spec.rag.chunk_len
+        batch["enc_states"] = S((B, enc_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return batch
+
+
+def cache_struct(spec: ArchSpec, shape_name: str) -> Any:
+    """Abstract decode caches for the shape's KV length."""
+    from repro.models import transformer as tf
+    sh = SHAPES[shape_name]
+    B, T = sh["global_batch"], sh["seq_len"]
+    cfg = spec.model
+    enc_len = 0
+    if cfg.arch == "encdec":
+        enc_len = 512 if cfg.frontend == "audio" else spec.rag.k * spec.rag.chunk_len
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, max_seq=T, enc_len=enc_len))

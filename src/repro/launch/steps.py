@@ -1,0 +1,283 @@
+"""Step builders: the jit-able programs the launcher / dry-run compile.
+
+  * ``build_train_step``   — fwd+bwd+AdamW, FSDP/TP(/EP) sharded
+  * ``build_prefill_step`` — full-sequence forward building the KV cache
+  * ``build_serve_step``   — one retrieval-augmented decode step: LM decode,
+    hidden-state query, ChamVS distributed search, payload gather, kNN-LM
+    interpolation (decoder-only) or retrieved-chunk re-encoding (encdec) —
+    paper Fig. 3 steps 1-10 in one program (monolithic mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchSpec
+from repro.core import chamvs as chamvs_lib
+from repro.core import rag as rag_lib
+from repro.core.chamvs import ChamVSConfig
+from repro.models import transformer as tf
+from repro.models.ctx import activation_sharding
+from repro.models.sharding import cache_specs, dp_axes, param_specs, sanitize
+from repro.optim import adamw
+from repro.launch import specs as specs_lib
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def default_microbatches(spec: ArchSpec, shape_name: str, mesh: Mesh) -> int:
+    """Gradient-accumulation factor so per-microbatch saved activations fit
+    HBM: scan-over-layers remat saves n_layers x [B_loc, T, d] bf16 per
+    device (270 GB/device for llama3-405b at B_loc=16 — unrunnable without
+    accumulation)."""
+    import math
+    cfg = spec.model
+    sh = SHAPES[shape_name]
+    dp_size = math.prod(mesh.shape[a] for a in dp_axes(mesh)) or 1
+    b_loc = max(sh["global_batch"] // dp_size, 1)
+    save_bytes = cfg.n_layers * b_loc * sh["seq_len"] * cfg.d_model * 2
+    budget = 6e9          # leave headroom beside params/optimizer/grads
+    micro = 1
+    while save_bytes / micro > budget and micro < b_loc:
+        micro *= 2
+    return micro
+
+
+def build_train_step(spec: ArchSpec, shape_name: str, mesh: Mesh,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     remat: bool = True, microbatches: Optional[int] = None):
+    """Returns (train_step, in_shardings, out_shardings).
+
+    ``microbatches`` > 1 runs gradient accumulation: fwd+bwd over batch
+    slices inside a lax.scan, one optimizer step — bounds remat-saved
+    activations (§Perf iteration 10)."""
+    cfg = spec.model
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if microbatches is None:
+        microbatches = default_microbatches(spec, shape_name, mesh)
+
+    dp = dp_axes(mesh)
+
+    def loss_fn(p, b):
+        return tf.lm_loss(p, cfg, b, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        with activation_sharding(dp, "model"):
+            if microbatches <= 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                mb = {k: v.reshape((microbatches,
+                                    v.shape[0] // microbatches) + v.shape[1:])
+                      if k != "positions" or v.ndim != 3
+                      else v.reshape(v.shape[0], microbatches,
+                                     v.shape[1] // microbatches, v.shape[2]
+                                     ).transpose(1, 0, 2, 3)
+                      for k, v in batch.items()}
+
+                def acc_step(carry, bslice):
+                    l_acc, g_acc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, bslice)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                    return (l_acc + l, g_acc), None
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.zeros((), jnp.float32), g0), mb)
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    p_struct = abstract_params(cfg)
+    p_specs = sanitize(param_specs(cfg, mesh), p_struct, mesh)
+    opt_specs = adamw.OptState(step=P(), m=p_specs, v=p_specs)
+    b_specs = sanitize(
+        specs_lib.train_batch_specs(spec, shape_name, mesh),
+        specs_lib.train_batch_struct(spec, shape_name), mesh)
+    in_sh = (named(mesh, p_specs), named(mesh, opt_specs),
+             named(mesh, b_specs))
+    out_sh = (named(mesh, p_specs), named(mesh, opt_specs), None)
+    jitted = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    return jitted, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(spec: ArchSpec, shape_name: str, mesh: Mesh):
+    cfg = spec.model
+    sh = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+
+    kv_batch = "dp" if sh["global_batch"] >= 8 else None
+    kv_seq = "model" if sh["global_batch"] >= 8 else ("dp", "model")
+
+    def prefill_step(params, caches, batch):
+        with activation_sharding(dp, "model", kv_batch=kv_batch,
+                                 kv_seq=kv_seq):
+            enc_states = None
+            if "enc_embeds" in batch:
+                enc_states = tf.encode(params, cfg, batch["enc_embeds"])
+            logits, caches = tf.forward(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), positions=batch.get("positions"),
+                mode="prefill", caches=caches, enc_states=enc_states)
+        return logits[:, -1], caches
+
+    p_specs = sanitize(param_specs(cfg, mesh), abstract_params(cfg), mesh)
+    c_struct = specs_lib.cache_struct(spec, shape_name)
+    c_specs = sanitize(
+        cache_specs(cfg, mesh, c_struct, shard_seq=(sh["global_batch"] < 8)),
+        c_struct, mesh)
+    b_struct = specs_lib.prefill_struct(spec, shape_name)
+    b_specs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+               if k != "positions" or v.shape[0] != 3
+               else P(None, dp, None)
+               for k, v in b_struct.items()}
+    b_specs = sanitize(b_specs, b_struct, mesh)
+    in_sh = (named(mesh, p_specs), named(mesh, c_specs), named(mesh, b_specs))
+    logits_spec = sanitize(
+        P(dp, "model"),
+        jax.ShapeDtypeStruct((sh["global_batch"], cfg.vocab_size),
+                             jnp.float32), mesh)
+    out_sh = (NamedSharding(mesh, logits_spec), named(mesh, c_specs))
+    jitted = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    return jitted, (p_specs, c_specs, b_specs)
+
+
+# ---------------------------------------------------------------------------
+# serving: retrieval-augmented decode
+# ---------------------------------------------------------------------------
+
+def build_serve_step(spec: ArchSpec, shape_name: str, mesh: Mesh,
+                     db: Optional[specs_lib.ServeDBSpec] = None,
+                     with_retrieval: bool = True):
+    """The paper's token-generation step (Fig. 3). Returns
+    (serve_step, shardings, (db_cfg, structs)).
+
+    serve_step(params, caches, batch, db_params, db_shard, payload[, proj])
+      -> (logprobs_or_logits [B, V], caches)
+    """
+    cfg = spec.model
+    rag = spec.rag
+    sh = SHAPES[shape_name]
+    B = sh["global_batch"]
+    dp = dp_axes(mesh)
+    db = db or specs_lib.ServeDBSpec()
+    n_shards = specs_lib.num_db_shards(mesh)
+    ccfg = db.for_model(cfg, n_shards, rag.k)
+    dq = ccfg.ivfpq.dim
+    needs_proj = cfg.d_model != dq
+
+    search = chamvs_lib.make_distributed_search(
+        mesh, ccfg, db_axes=dp, query_axis="model", nq=B) \
+        if with_retrieval else None
+    pgather = chamvs_lib.make_distributed_gather(mesh, dp + ("model",)) \
+        if with_retrieval else None
+
+    kv_batch = "dp" if B >= 8 else None
+    kv_seq = "model" if B >= 8 else ("dp", "model")
+
+    def serve_step(params, caches, batch, db_params=None, db_shard=None,
+                   payload=None, proj=None):
+        token, position = batch["token"], batch["position"]
+        enc_states = batch.get("enc_states")
+        with activation_sharding(dp, "model", kv_batch=kv_batch,
+                                 kv_seq=kv_seq):
+            logits, caches, hidden = tf.decode_step(
+                params, cfg, caches, token, position, enc_states=enc_states,
+                return_hidden=True)
+        if not with_retrieval:
+            return logits, caches
+        # --- paper Fig. 3, steps 1-9 ---
+        query = hidden.astype(jnp.float32)
+        if needs_proj:
+            query = query @ proj                        # OPQ-style down-proj
+        dists, ids = search(db_params, db_shard, query)  # [B, K] each
+        if rag.mode == "retro" and cfg.arch == "encdec":
+            # chunk payload -> embed -> shallow encoder -> new cross-states.
+            # This is the *retrieval-boundary* step (the latency spikes in
+            # paper Fig. 11); steady-state steps reuse enc_states.
+            chunks = pgather(payload, ids)                       # [B,K,cl]
+            chunks = jnp.where((ids >= 0)[..., None], chunks, 0)
+            emb = tf.embed_tokens(params, chunks.reshape(B, -1))
+            new_enc = tf.encode(params, cfg, emb)
+            logits2, caches, _ = tf.decode_step(
+                params, cfg, caches, token, position, enc_states=new_enc,
+                return_hidden=True)
+            return logits2, caches
+        # kNN-LM: payload maps vector id -> next token of that context
+        knn_tok = pgather(payload, ids)
+        knn_tok = jnp.where(ids >= 0, knn_tok, -1)
+        logp = rag_lib.knnlm_interpolate(logits, dists, knn_tok,
+                                         rag.lam, rag.temperature)
+        return logp, caches
+
+    # shardings
+    p_specs = sanitize(param_specs(cfg, mesh), abstract_params(cfg), mesh)
+    c_struct = specs_lib.cache_struct(spec, shape_name)
+    c_specs = sanitize(cache_specs(cfg, mesh, c_struct, shard_seq=(B < 8)),
+                       c_struct, mesh)
+    b_specs: Dict[str, Any] = {"token": P(dp, None), "position": P(dp)}
+    if cfg.arch == "encdec":
+        b_specs["enc_states"] = P(dp, None, None)
+    if B < 8:  # long_500k: batch too small to shard
+        b_specs = {"token": P(), "position": P()}
+        if cfg.arch == "encdec":
+            b_specs["enc_states"] = P(None, None, "model")
+    shardings: Dict[str, Any] = dict(params=p_specs, caches=c_specs,
+                                     batch=b_specs)
+    structs: Dict[str, Any] = dict(cache=c_struct,
+                                   batch=specs_lib.decode_struct(spec, shape_name))
+    if with_retrieval:
+        dbp_struct, dbs_struct = specs_lib.db_struct(ccfg, n_shards)
+        dbp_specs, dbs_specs = specs_lib.db_specs(mesh)
+        if rag.mode == "retro" and cfg.arch == "encdec":
+            payload_struct = jax.ShapeDtypeStruct(
+                (db.n_vectors, rag.chunk_len), jnp.int32)
+            payload_spec = P(dp + ("model",), None)
+        else:
+            payload_struct = jax.ShapeDtypeStruct((db.n_vectors,), jnp.int32)
+            payload_spec = P(dp + ("model",))
+        shardings.update(db_params=dbp_specs, db_shard=dbs_specs,
+                         payload=payload_spec)
+        structs.update(db_params=dbp_struct, db_shard=dbs_struct,
+                       payload=payload_struct)
+        if needs_proj:
+            shardings["proj"] = P(None, "model")
+            structs["proj"] = jax.ShapeDtypeStruct((cfg.d_model, dq),
+                                                   jnp.float32)
+    in_sh = tuple(named(mesh, shardings[k]) for k in
+                  ("params", "caches", "batch"))
+    extra = tuple(named(mesh, shardings[k])
+                  for k in ("db_params", "db_shard", "payload", "proj")
+                  if k in shardings)
+    logits_spec = sanitize(
+        P(dp if B >= 8 else None, "model"),
+        jax.ShapeDtypeStruct((B, cfg.vocab_size), jnp.float32), mesh)
+    out_sh = (NamedSharding(mesh, logits_spec), named(mesh, c_specs))
+    jitted = jax.jit(serve_step, in_shardings=in_sh + extra,
+                     out_shardings=out_sh, donate_argnums=(1,))
+    return jitted, shardings, (ccfg, structs)

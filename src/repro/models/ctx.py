@@ -1,0 +1,74 @@
+"""Activation-sharding context: lets layer code apply
+``with_sharding_constraint`` hints without threading mesh axis names through
+every call signature.
+
+The step builders (launch/steps.py) set the context; layer code calls
+``constrain(x, *dims)`` with logical dim tags:
+  "dp"     -> the compound data-parallel axes ("pod","data")
+  "model"  -> the tensor-parallel axis
+  None     -> unsharded
+Outside any context (unit tests, single-device runs) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(dp_axes: Tuple[str, ...], model_axis: str = "model",
+                        kv_batch="dp", kv_seq="model"):
+    """kv_batch / kv_seq: logical tags for the KV-cache batch and sequence
+    dims (long_500k flips them: batch 1 cannot shard, sequence takes all
+    axes)."""
+    tok = _CTX.set(dict(dp=tuple(dp_axes), model=model_axis,
+                        kv_batch=kv_batch, kv_seq=kv_seq))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def kv_tags():
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    return ctx["kv_batch"], ctx["kv_seq"]
+
+
+def constrain(x, *dims):
+    """dims: one tag per array dim ("dp" | "model" | None | ("dp","model"))."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    entries = []
+    for d in dims:
+        if d is None:
+            entries.append(None)
+        elif d == "dp":
+            entries.append(ctx["dp"] if len(ctx["dp"]) > 1 else
+                           (ctx["dp"][0] if ctx["dp"] else None))
+        elif d == "model":
+            entries.append(ctx["model"])
+        elif isinstance(d, tuple):
+            flat = []
+            for e in d:
+                if e == "dp":
+                    flat.extend(ctx["dp"])
+                elif e == "model":
+                    flat.append(ctx["model"])
+            entries.append(tuple(flat))
+        else:
+            entries.append(d)
+    # divisibility guard: skip constraint if any dim cannot divide
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FFN (dbrx: 16e top-4; phi3.5-moe: 16e top-2).
+
+Sort-based capacity dispatch (MegaBlocks-lite, static shapes):
+  router top-k -> flatten (token, expert) assignments -> stable-sort by
+  expert -> slot-in-expert via segment arithmetic -> scatter into a dense
+  [E, C, d] buffer -> batched expert GEMMs -> weighted scatter-add combine.
+
+This keeps compute proportional to top_k (not E) and avoids the GShard
+[N, E, C] one-hot dispatch tensor, which does not fit at train_4k scale.
+Tokens beyond expert capacity are dropped (standard GShard semantics); the
+residual path keeps their representation intact.
+
+Sharding (DESIGN.md §7): experts over the "data" axis (EP), expert-internal
+f over "model" (TP); the dispatch scatter becomes an all-to-all under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def route_topk(x: jnp.ndarray, router_w: jnp.ndarray, top_k: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [N, d], router_w [d, E] -> (weights [N, k] softmaxed over chosen,
+    expert_ids [N, k])."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    top_logits, top_ids = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(top_logits, axis=-1)
+    return w, top_ids
+
+
+def load_balance_loss(x: jnp.ndarray, router_w: jnp.ndarray, top_k: int
+                      ) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    E = logits.shape[-1]
+    p = jax.nn.softmax(logits, axis=-1)
+    _, top_ids = jax.lax.top_k(logits, top_k)
+    f = jnp.zeros((E,), jnp.float32).at[top_ids.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    return E * jnp.sum(f * p.mean(axis=0))
+
+
+def moe_ffn(
+    x: jnp.ndarray,            # [N, d] flattened tokens
+    router_w: jnp.ndarray,     # [d, E]
+    w_gate: jnp.ndarray,       # [E, d, f]
+    w_up: jnp.ndarray,         # [E, d, f]
+    w_down: jnp.ndarray,       # [E, f, d]
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> jnp.ndarray:
+    """Top-k expert FFN with capacity dropping. Returns [N, d]."""
+    N, d = x.shape
+    E = router_w.shape[-1]
+    C = int(max(1, -(-int(N * top_k * capacity_factor) // E)))
+    C = -(-C // 8) * 8  # pad capacity to a lane-friendly multiple
+
+    gate_w, expert_ids = route_topk(x, router_w, top_k)      # [N,k] each
+    flat_e = expert_ids.reshape(-1)                          # [N*k]
+    flat_t = jnp.repeat(jnp.arange(N), top_k)                # [N*k] token idx
+    flat_w = gate_w.reshape(-1)                              # [N*k]
+
+    # stable sort by expert -> contiguous expert segments
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # slot within expert = rank - segment start
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    seg_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(N * top_k, dtype=jnp.int32) - seg_start[se]
+    keep = slot < C
+
+    # dispatch: scatter tokens into the [E, C, d] expert buffer
+    e_idx = jnp.where(keep, se, 0)
+    s_idx = jnp.where(keep, slot, 0)
+    xin = jnp.where(keep[:, None], x[st], 0.0)
+    buf = jnp.zeros((E, C, d), x.dtype).at[e_idx, s_idx].add(xin)
+
+    # batched expert GEMMs (gated MLP)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y_e = jnp.einsum("ecf,efd->ecd", g * u, w_down)          # [E, C, d]
+
+    # combine: gather each assignment's expert output, weight, scatter by token
+    y_tok = y_e[e_idx, s_idx]                                # [N*k, d]
+    y_tok = jnp.where(keep[:, None], y_tok, 0.0) * sw[:, None].astype(y_e.dtype)
+    return jnp.zeros((N, d), y_e.dtype).at[st].add(y_tok)

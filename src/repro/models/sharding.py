@@ -1,0 +1,177 @@
+"""Partition rules (DESIGN.md §7): FSDP over ("pod","data"), TP over "model",
+EP over "data" for MoE experts.
+
+GSPMD (jit + NamedSharding) rather than shard_map is used for the model
+programs because several assigned archs have head counts that do not divide
+the 16-way model axis (qwen2 14H, hymba 25H, rwkv6 40H) — GSPMD handles
+uneven sharding by padding; shard_map would reject it. ChamVS keeps
+shard_map (its shapes are deployment-controlled).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The compound FSDP/batch axis: ("pod","data") when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _block_rules(dp, ep_axis: Optional[str], pod_axis: Optional[str]
+                 ) -> Dict[str, P]:
+    """Specs for stacked per-layer params ([L, ...] leading axis unsharded)."""
+    return {
+        # attention
+        "ln1": P(), "ln2": P(), "lnx": P(),
+        "wq": P(None, dp, "model"), "wk": P(None, dp, "model"),
+        "wv": P(None, dp, "model"), "wo": P(None, "model", dp),
+        "bq": P(None, "model"), "bk": P(None, "model"), "bv": P(None, "model"),
+        "xwq": P(None, dp, "model"), "xwk": P(None, dp, "model"),
+        "xwv": P(None, dp, "model"), "xwo": P(None, "model", dp),
+        # dense mlp (3D) — moe variants (4D) handled by ndim below
+        "wg": P(None, dp, "model"), "wu": P(None, dp, "model"),
+        "wd": P(None, "model", dp),
+        "router": P(None, dp, None),
+        # hybrid mamba branch
+        "w_in": P(None, dp, "model"), "conv_w": P(None, None, "model"),
+        "w_bcdt": P(None, "model", None), "a_log": P(), "dt_bias": P(),
+        "d_skip": P(), "w_out": P(None, "model", dp),
+        "ln_attn_out": P(), "ln_ssm_out": P(),
+        # rwkv6
+        "mu_r": P(), "mu_k": P(), "mu_v": P(), "mu_g": P(), "mu_w": P(),
+        "w_r": P(None, dp, "model"), "w_k": P(None, dp, "model"),
+        "w_v": P(None, dp, "model"), "w_g": P(None, dp, "model"),
+        "w_o": P(None, "model", dp),
+        "w0": P(None, "model"), "w_lora_a": P(None, dp, None),
+        "w_lora_b": P(None, None, "model"),
+        "bonus_u": P(), "ln_x": P(None, "model"),
+        "mu_ck": P(), "mu_cr": P(),
+        "w_ck": P(None, dp, "model"), "w_cv": P(None, "model", dp),
+        "w_cr": P(None, dp, "model"),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching ``transformer.init_params`` output."""
+    dp = dp_axes(mesh)
+    ep = "data" if "data" in mesh.axis_names else None
+    pod = "pod" if "pod" in mesh.axis_names else None
+    rules = _block_rules(dp, ep, pod)
+
+    moe_rules = {
+        # experts over data (EP); d over pod (extra FSDP dim); f over model
+        "wg": P(None, ep, pod, "model"), "wu": P(None, ep, pod, "model"),
+        "wd": P(None, ep, "model", pod),
+    }
+
+    def spec_of(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1]
+        in_moe = leaf.ndim == 4 and name in moe_rules
+        if name == "embed":
+            return P("model", dp)
+        if name == "lm_head":
+            return P(dp, "model")
+        if name == "final_norm":
+            return P()
+        if in_moe:
+            return moe_rules[name]
+        if name in rules:
+            s = rules[name]
+            # stacked-norm etc: P() means fully replicated regardless of ndim
+            return s
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, _as_shape_tree(cfg))
+
+
+def _as_shape_tree(cfg: ModelConfig):
+    """Abstract params (ShapeDtypeStructs) — cheap spec derivation without
+    materializing weights."""
+    from repro.models import transformer as tf
+    return jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                shard_seq: bool = False) -> Any:
+    """Specs for decode caches.
+
+    KV caches are sharded batch-over-dp and **sequence-over-model**
+    (split-KV / flash-decode style): every TP column streams S/|model| of
+    the cache and the softmax reduces across columns with a tiny all-reduce.
+    Head-dim sharding is deliberately avoided — several archs have
+    n_kv_heads (2-8) smaller than the 16-way model axis, which would force
+    GSPMD to replicate the cache per column (measured 16x decode-bytes blowup,
+    EXPERIMENTS.md §Perf iteration 1).
+
+    ``shard_seq`` (long_500k, batch 1): batch cannot shard, so sequence goes
+    over dp axes as well."""
+    dp = dp_axes(mesh)
+
+    def spec_of(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1]
+        if name in ("k", "v", "xk", "xv"):      # [Lc, B, S, KV, dh]
+            if shard_seq:
+                return P(None, None, dp + ("model",), None, None)
+            return P(None, dp, "model", None, None)
+        if name == "wkv":                        # [Lc, B, H, dh, dh]
+            return P(None, dp, "model", None, None)
+        if name == "ssm":                        # [Lc, B, H, dh, ds]
+            return P(None, dp, "model", None, None)
+        if name == "conv":                       # [Lc, B, cw-1, d_in]
+            return P(None, dp, None, "model")
+        if name in ("st", "sc"):                 # [Lc, B, d]
+            return P(None, dp, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_tree)
+
+
+def put_named(tree, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+def sanitize(spec_tree, struct_tree, mesh: Mesh):
+    """Drop sharding on dimensions the mesh cannot divide evenly.
+
+    jit in_shardings require divisibility; several archs have dims like
+    d_ff=1368 (dec-s) or vocab=256206 (seamless) that do not divide a
+    16-way axis. For compound axes, progressively drop leading axes
+    (("pod","data") -> ("data",)) before giving up."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix_leaf(spec: P, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = getattr(leaf, "shape", None)
+        if dims is None:
+            return spec
+        out = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(dims):
+                out.append(None if i >= len(dims) else entry)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= sizes.get(a, 1)
+                if dims[i] % prod == 0:
+                    break
+                axes = axes[1:]
+            out.append(tuple(axes) if len(axes) > 1
+                       else (axes[0] if axes else None))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    return jax.tree.map(fix_leaf, spec_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, P))

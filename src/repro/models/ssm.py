@@ -1,0 +1,277 @@
+"""State-space sequence mixers: a Mamba-style selective-SSM head (the parallel
+branch of Hymba blocks) and the RWKV-6 "Finch" time/channel mix.
+
+Both are written as (a) a parallel form scanning time with ``lax.scan``
+(training/prefill) and (b) a single-step form for O(1)-state decode — the
+property that makes these archs the designated ``long_500k`` cells
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba's parallel branch)
+# ---------------------------------------------------------------------------
+
+class MambaParams(NamedTuple):
+    w_in: jnp.ndarray       # [d_model, 2*d_in]   (x and gate z)
+    conv_w: jnp.ndarray     # [conv_width, d_in]  depthwise causal conv
+    w_bcdt: jnp.ndarray     # [d_in, 2*ds + H]    B, C, dt projections
+    a_log: jnp.ndarray      # [H, ds]             -exp(a_log) = A diagonal
+    dt_bias: jnp.ndarray    # [H]
+    d_skip: jnp.ndarray     # [H]
+    w_out: jnp.ndarray      # [d_in, d_model]
+
+
+def _ssm_step(h, inputs, a):
+    """h [B,H,dh,ds]; one selective-SSM step (diag A, shared B/C per head)."""
+    xt, bt, ct, dt = inputs     # [B,H,dh], [B,ds], [B,ds], [B,H]
+    da = jnp.exp(dt[..., None] * a[None])                    # [B,H,ds]
+    h = h * da[:, :, None, :] + (dt[..., None, None]
+                                 * xt[..., None]
+                                 * bt[:, None, None, :])     # [B,H,dh,ds]
+    yt = jnp.einsum("bhds,bs->bhd", h, ct)
+    return h, yt
+
+
+def mamba_scan(p: MambaParams, x: jnp.ndarray, state=None
+               ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """x [B,T,d_model] -> (y [B,T,d_model], (ssm_state, conv_state)).
+
+    state: optional (ssm [B,H,dh,ds], conv [B,conv_w-1,d_in]) to resume."""
+    B, T, _ = x.shape
+    cw, d_in = p.conv_w.shape
+    H, ds = p.a_log.shape
+    dh = d_in // H
+    xz = x @ p.w_in
+    xi, z = jnp.split(xz, 2, axis=-1)                        # [B,T,d_in] each
+
+    conv_prev = (jnp.zeros((B, cw - 1, d_in), x.dtype)
+                 if state is None else state[1])
+    xi_pad = jnp.concatenate([conv_prev, xi], axis=1)
+    # depthwise causal conv
+    xc = sum(xi_pad[:, i:i + T] * p.conv_w[i][None, None]
+             for i in range(cw))
+    xc = jax.nn.silu(xc)
+
+    bcdt = xc @ p.w_bcdt
+    b_t = bcdt[..., :ds]
+    c_t = bcdt[..., ds:2 * ds]
+    dt = jax.nn.softplus(bcdt[..., 2 * ds:] + p.dt_bias)     # [B,T,H]
+    a = -jnp.exp(p.a_log.astype(jnp.float32))                # [H,ds]
+
+    xh = xc.reshape(B, T, H, dh)
+    h0 = (jnp.zeros((B, H, dh, ds), jnp.float32)
+          if state is None else state[0])
+
+    def step(h, ins):
+        return _ssm_step(h, ins, a)
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(b_t.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(c_t.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(dt.astype(jnp.float32), 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d_in)           # [B,T,d_in]
+    y = y + xc * p.d_skip.repeat(dh)[None, None]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p.w_out
+    conv_state = xi_pad[:, T:] if cw > 1 else conv_prev
+    return y, (hT, conv_state)
+
+
+def mamba_decode(p: MambaParams, x: jnp.ndarray, state
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token step: x [B,1,d_model], state from mamba_scan."""
+    return mamba_scan(p, x, state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) — data-dependent decay linear recurrence
+# ---------------------------------------------------------------------------
+
+class RWKV6Params(NamedTuple):
+    # time mix
+    mu_r: jnp.ndarray       # [d]   token-shift mix coefficients
+    mu_k: jnp.ndarray       # [d]
+    mu_v: jnp.ndarray       # [d]
+    mu_g: jnp.ndarray       # [d]
+    mu_w: jnp.ndarray       # [d]
+    w_r: jnp.ndarray        # [d, H*dh]
+    w_k: jnp.ndarray        # [d, H*dh]
+    w_v: jnp.ndarray        # [d, H*dh]
+    w_g: jnp.ndarray        # [d, H*dh]
+    w_o: jnp.ndarray        # [H*dh, d]
+    # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+    w0: jnp.ndarray         # [H*dh]
+    w_lora_a: jnp.ndarray   # [d, 64]
+    w_lora_b: jnp.ndarray   # [64, H*dh]
+    bonus_u: jnp.ndarray    # [H, dh]
+    ln_x: jnp.ndarray       # [H*dh] per-head group-norm scale
+    # channel mix
+    mu_ck: jnp.ndarray      # [d]
+    mu_cr: jnp.ndarray      # [d]
+    w_ck: jnp.ndarray       # [d, f]
+    w_cv: jnp.ndarray       # [f, d]
+    w_cr: jnp.ndarray       # [d, d]
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray        # [B, H, dh, dh] f32
+    shift_t: jnp.ndarray    # [B, d] last token (time-mix shift)
+    shift_c: jnp.ndarray    # [B, d] last token (channel-mix shift)
+
+
+def rwkv6_init_state(B: int, H: int, dh: int, d: int, dtype) -> RWKVState:
+    return RWKVState(
+        wkv=jnp.zeros((B, H, dh, dh), jnp.float32),
+        shift_t=jnp.zeros((B, d), dtype),
+        shift_c=jnp.zeros((B, d), dtype),
+    )
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, H: int) -> jnp.ndarray:
+    """Per-head LayerNorm of the wkv readout (RWKV's ln_x)."""
+    B, T, D = y.shape
+    dh = D // H
+    yh = y.reshape(B, T, H, dh).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (yh.reshape(B, T, D) * scale).astype(y.dtype)
+
+
+def rwkv6_time_mix(p: RWKV6Params, x: jnp.ndarray, state: RWKVState, H: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x [B,T,d] -> (y [B,T,d], wkv_state', shift'). Works for any T (T=1 is
+    the decode step)."""
+    B, T, d = x.shape
+    D = p.w_r.shape[-1]
+    dh = D // H
+    x_prev = jnp.concatenate([state.shift_t[:, None], x[:, :-1]], axis=1)
+    def mix(mu):
+        return x + (x_prev - x) * mu[None, None]
+    r = (mix(p.mu_r) @ p.w_r).reshape(B, T, H, dh)
+    k = (mix(p.mu_k) @ p.w_k).reshape(B, T, H, dh)
+    v = (mix(p.mu_v) @ p.w_v).reshape(B, T, H, dh)
+    g = jax.nn.silu(mix(p.mu_g) @ p.w_g)                     # [B,T,D]
+    wx = mix(p.mu_w)
+    w_log = p.w0[None, None] + jnp.tanh(wx @ p.w_lora_a) @ p.w_lora_b
+    # decay clamp w >= e^-8 (~3e-4/token — beyond any practical decay):
+    # keeps the chunked form's within-chunk decay products inside f32 range
+    w = jnp.exp(-jnp.clip(jnp.exp(w_log.astype(jnp.float32)), 0.0, 8.0))
+    w = w.reshape(B, T, H, dh)
+
+    u = p.bonus_u                                             # [H, dh]
+
+    def step(s, ins):
+        rt, kt, vt, wt = ins                                 # [B,H,dh] each
+        kv = kt[..., :, None] * vt[..., None, :]             # [B,H,dh,dh]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    sT, ys = jax.lax.scan(
+        step, state.wkv,
+        (jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(w, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D).astype(x.dtype)
+    y = _group_norm(y, p.ln_x, H)
+    y = (y * g.astype(y.dtype)) @ p.w_o
+    return y, sT, x[:, -1]
+
+
+def rwkv6_time_mix_chunked(p: RWKV6Params, x: jnp.ndarray, state: RWKVState,
+                           H: int, chunk: int = 32
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked-parallel RWKV-6 (GLA-style): identical math to
+    ``rwkv6_time_mix`` but the per-token state recurrence is replaced by
+    per-chunk matmuls, so the [H, dh, dh] state reads/writes HBM once per
+    ``chunk`` tokens instead of every token (the measured 1.3e5 s/step
+    memory wall of the naive scan; EXPERIMENTS.md §Perf iteration 8).
+
+    Within a chunk of decay products a_j = prod_{l<j} w_l:
+      y_j   = (r_j*a_j) @ S_0  +  sum_{i<j} ((r_j*a_j/(a_i w_i))·k_i) v_i
+              + u·(r_j k_j) v_j
+      S_out = D*S_0 + sum_i (D/(a_i w_i)) k_i (x) v_i,   D = prod_l w_l
+    Computed in f32; chunk length bounds the decay-product dynamic range.
+    """
+    B, T, d = x.shape
+    D = p.w_r.shape[-1]
+    dh = D // H
+    if T % chunk != 0 or T <= chunk:
+        return rwkv6_time_mix(p, x, state, H)
+    x_prev = jnp.concatenate([state.shift_t[:, None], x[:, :-1]], axis=1)
+    def mix(mu):
+        return x + (x_prev - x) * mu[None, None]
+    r = (mix(p.mu_r) @ p.w_r).reshape(B, T, H, dh).astype(jnp.float32)
+    k = (mix(p.mu_k) @ p.w_k).reshape(B, T, H, dh).astype(jnp.float32)
+    v = (mix(p.mu_v) @ p.w_v).reshape(B, T, H, dh).astype(jnp.float32)
+    g = jax.nn.silu(mix(p.mu_g) @ p.w_g)
+    wx = mix(p.mu_w)
+    w_log = p.w0[None, None] + jnp.tanh(wx @ p.w_lora_a) @ p.w_lora_b
+    w = jnp.exp(-jnp.clip(jnp.exp(w_log.astype(jnp.float32)), 0.0, 8.0)
+                ).reshape(B, T, H, dh)
+    u = p.bonus_u.astype(jnp.float32)                        # [H, dh]
+
+    C = chunk
+    n = T // C
+    rc = r.reshape(B, n, C, H, dh)
+    kc = k.reshape(B, n, C, H, dh)
+    vc = v.reshape(B, n, C, H, dh)
+    wc = w.reshape(B, n, C, H, dh)
+    # log-decays: L_excl[j] = sum_{l<j} logw_l; pairwise factors are
+    # exp(L_j - L_i - logw_i). Normalizing both sides by the mid-chunk
+    # cumlog keeps each factor within f32 even for fast-decay channels
+    # (raw products underflow at w^C; measured 1.0 abs error unnormalized).
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cs = jnp.cumsum(logw, axis=2)                            # inclusive
+    L_excl = cs - logw                                       # [B,n,C,H,dh]
+    L_mid = cs[:, :, C // 2][:, :, None]                     # per-chunk ref
+    Dk = jnp.exp(cs[:, :, -1])                               # [B,n,H,dh] <=1
+    r_t = rc * jnp.exp(L_excl - L_mid)                       # intra r~_j
+    k_t = kc * jnp.exp(L_mid - L_excl - logw)                # intra κ_i
+    r_a = rc * jnp.exp(L_excl)                               # inter (<=1)
+    k_s = kc * jnp.exp(cs[:, :, -1][:, :, None] - L_excl - logw)  # state(<=1)
+
+    # intra-chunk strict-lower attention
+    scores = jnp.einsum("bnchd,bnshd->bnhcs", r_t, k_t)      # [B,n,H,C,C]
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhcs,bnshd->bnchd", scores, vc)
+    # diagonal (bonus-u) term
+    diag = jnp.einsum("bnchd,hd,bnchd->bnch", rc, u, kc)     # r·u·k per tok
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: scan over chunks carrying the [B,H,dh,dh] state
+    def chunk_step(S, ins):
+        r_aj, k_sj, vj, Dj = ins
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_aj, S)
+        S = Dj[..., None] * S + jnp.einsum("bchk,bchv->bhkv", k_sj, vj)
+        return S, y_inter
+
+    S_fin, y_inter = jax.lax.scan(
+        chunk_step, state.wkv,
+        (jnp.moveaxis(r_a, 1, 0), jnp.moveaxis(k_s, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(Dk, 1, 0)))
+    y = (y_intra + jnp.moveaxis(y_inter, 0, 1)).reshape(B, T, D)
+    y = _group_norm(y.astype(x.dtype), p.ln_x, H)
+    y = (y * g.astype(y.dtype)) @ p.w_o
+    return y, S_fin, x[:, -1]
+
+
+def rwkv6_channel_mix(p: RWKV6Params, x: jnp.ndarray, shift: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x_prev = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p.mu_ck[None, None]
+    xr = x + (x_prev - x) * p.mu_cr[None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p.w_ck))
+    out = jax.nn.sigmoid(xr @ p.w_cr) * (kk @ p.w_cv)
+    return out, x[:, -1]

@@ -1,0 +1,73 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick, DESIGN.md §4 beyond-paper list).
+
+Int8 stochastic-rounding quantization with per-tensor scales; the compressed
+all-reduce runs the expensive inter-pod hop at 1/4 the bytes of bf16:
+
+    g_q, scale = quantize_int8(g)
+    g_sum = psum(g_q.astype(int32)) ; scale_max = pmax(scale)
+    g ~= dequantize(g_sum, scale_max)
+
+Exposed two ways: (a) pure quantize/dequantize utilities (tested for bias /
+error bounds in tests/test_compression.py), (b) ``compressed_psum`` for
+shard_map-based training loops. The GSPMD train path keeps full-precision
+reduction by default; the launcher enables compression with
+``--grad-compression int8`` which wraps the gradient tree between backward
+and optimizer with a shard_map over the "pod" axis only (intra-pod ICI is
+fast; the pod hop is the slow link, paper's disaggregation logic applied to
+training comms).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, key: jax.Array | None = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 with optional stochastic rounding.
+
+    Returns (q int8, scale f32) with x ~= q * scale."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    y = x32 / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(tree: Any, axis_name: str, key: jax.Array | None = None
+                    ) -> Any:
+    """All-reduce a gradient tree over ``axis_name`` in int8.
+
+    Each participant quantizes with its own scale; scales are max-reduced
+    first so the int32 sum dequantizes consistently. Must run inside
+    shard_map/pmap with ``axis_name`` bound."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        # consistent scale across participants
+        amax = jax.lax.pmax(jnp.max(jnp.abs(leaf.astype(jnp.float32))),
+                            axis_name)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        y = leaf.astype(jnp.float32) / scale
+        if k is not None:
+            y = jnp.floor(y + jax.random.uniform(k, y.shape))
+        else:
+            y = jnp.round(y)
+        q = jnp.clip(y, -127, 127).astype(jnp.int8)
+        s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        out.append((s.astype(jnp.float32) * scale).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,15 @@
+import os
+import pathlib
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device
+# (the 512-device override lives only in launch/dryrun.py). Multi-device
+# tests spawn subprocesses (tests/test_distributed.py).
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")

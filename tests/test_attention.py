@@ -1,0 +1,100 @@
+"""Attention paths: flash vs naive oracle, caches, ring buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    naive_attention, update_cache)
+
+
+def make_qkv(seed, B, T, S, H, KV, D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    return q, k, v
+
+
+@given(st.integers(1, 3), st.integers(1, 70), st.sampled_from([1, 2, 4]),
+       st.sampled_from([0, 5, 16]), st.booleans(), st.integers(0, 99))
+def test_flash_matches_naive(B, T, qkv_ratio, window, causal, seed):
+    H, KV, D = 4, 4 // qkv_ratio if 4 % qkv_ratio == 0 else 4, 16
+    H = KV * qkv_ratio
+    q, k, v = make_qkv(seed, B, T, T, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    o1 = naive_attention(q, k, v, pos, pos, causal, window)
+    o2 = flash_attention(q, k, v, pos, pos, causal, window,
+                         q_block=16, k_block=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_cross_attention_lengths():
+    """Tq != Tk (encoder-decoder cross attention)."""
+    B, T, S, H, KV, D = 2, 7, 33, 4, 2, 16
+    q, k, v = make_qkv(0, B, T, S, H, KV, D)
+    qpos = jnp.zeros((B, T), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o1 = naive_attention(q, k, v, qpos, kpos, causal=False)
+    o2 = flash_attention(q, k, v, qpos, kpos, causal=False,
+                         q_block=4, k_block=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_incremental_decode_equals_full(window):
+    """Prefill-then-decode token-by-token == one-shot causal attention."""
+    B, T, H, KV, D = 2, 24, 4, 2, 16
+    q, k, v = make_qkv(3, B, T, T, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    full = naive_attention(q, k, v, pos, pos, True, window)
+    ring = window > 0
+    S = window if ring else T
+    kc = jnp.zeros((B, S, KV, D))
+    vc = jnp.zeros((B, S, KV, D))
+    outs = []
+    for t in range(T):
+        kc, vc = update_cache(kc, vc, k[:, t:t + 1], v[:, t:t + 1],
+                              jnp.full((B,), t), ring=ring)
+        outs.append(decode_attention(q[:, t:t + 1], kc, vc,
+                                     jnp.full((B,), t), window=window,
+                                     ring=ring))
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_batched_positions_decode():
+    """Different sequence lengths per batch row (continuous batching)."""
+    B, S, H, KV, D = 3, 32, 2, 2, 8
+    q, k, v = make_qkv(5, B, 1, S, H, KV, D)
+    kc = jnp.zeros((B, S, KV, D))
+    vc = jnp.zeros((B, S, KV, D))
+    positions = jnp.array([3, 17, 31])
+    for b in range(B):
+        for t in range(int(positions[b]) + 1):
+            kb, vb = update_cache(kc[b:b+1], vc[b:b+1], k[b:b+1, t:t+1],
+                                  v[b:b+1, t:t+1], jnp.array([t]))
+            kc = kc.at[b:b+1].set(kb)
+            vc = vc.at[b:b+1].set(vb)
+    out = decode_attention(q, kc, vc, positions)
+    for b in range(B):
+        p = int(positions[b])
+        pos_row = jnp.arange(p + 1)[None]
+        ref = naive_attention(q[b:b+1], k[b:b+1, :p+1], v[b:b+1, :p+1],
+                              jnp.array([[p]]), pos_row, True, 0)
+        np.testing.assert_allclose(np.asarray(out[b:b+1]), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_fully_masked_rows_are_zero_not_nan():
+    B, T, H, KV, D = 1, 4, 2, 2, 8
+    q, k, v = make_qkv(9, B, T, T, H, KV, D)
+    qpos = jnp.array([[0, 1, 2, 3]])
+    kpos = jnp.array([[10, 11, 12, 13]])  # all in the future -> masked
+    out = naive_attention(q, k, v, qpos, kpos, causal=True)
+    assert not np.isnan(np.asarray(out)).any()
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

@@ -1,0 +1,154 @@
+"""IVF-PQ correctness + invariants (core of ChamVS)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import ivfpq
+from repro.core.ivfpq import (IVFPQConfig, build_shards, encode, exact_search,
+                              merge_topk, recall_at_k, scan_ivf_index,
+                              search_shard_ref, train_ivfpq)
+
+
+def clustered_data(key, n, d, n_clusters=32, spread=0.05):
+    """Synthetic data where IVF-PQ shines (and recall is meaningful)."""
+    kc, kx, ka = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_clusters, d))
+    assign = jax.random.randint(ka, (n,), 0, n_clusters)
+    return centers[assign] + spread * jax.random.normal(kx, (n, d))
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    key = jax.random.PRNGKey(0)
+    d, n = 32, 8192
+    cfg = IVFPQConfig(dim=d, nlist=32, m=8, list_cap=512)
+    vecs = clustered_data(key, n, d)
+    params = train_ivfpq(key, vecs[:4096], cfg, kmeans_iters=10)
+    shards = build_shards(params, np.asarray(vecs), cfg, num_shards=4)
+    return cfg, params, shards, vecs
+
+
+def test_encode_shapes_and_range(small_index):
+    cfg, params, _, vecs = small_index
+    codes, assign = encode(params, vecs[:100], cfg)
+    assert codes.shape == (100, cfg.m)
+    assert codes.dtype == jnp.uint8
+    assert int(codes.max()) < cfg.ksub
+    assert int(assign.max()) < cfg.nlist
+
+
+def test_shard_balance_and_coverage(small_index):
+    """Partition scheme 1 (paper §4.3): every list striped across shards;
+    shard loads balanced; every vector appears exactly once."""
+    cfg, params, shards, vecs = small_index
+    n = vecs.shape[0]
+    all_ids = np.concatenate([np.asarray(s.ids).ravel() for s in shards])
+    valid = all_ids[all_ids >= 0]
+    assert len(valid) == n
+    assert len(np.unique(valid)) == n
+    totals = [int(jnp.sum(s.list_len)) for s in shards]
+    assert max(totals) - min(totals) <= cfg.nlist  # stripe remainder bound
+    # per-list balance: lengths differ by at most 1 across shards
+    lens = np.stack([np.asarray(s.list_len) for s in shards])
+    assert int((lens.max(0) - lens.min(0)).max()) <= 1
+
+
+def test_recall_reasonable(small_index):
+    """R@10-in-top-100 (the paper's R@K regime, §6.1: R@100=93-94% scanning
+    0.1% of the DB): on clustered data, the true 10 nearest neighbors must
+    almost always appear among the returned 100 candidates."""
+    cfg, params, shards, vecs = small_index
+    q = vecs[:64] + 0.01  # near-duplicate queries
+    _, probe = scan_ivf_index(params, q, nprobe=8)
+    per = [search_shard_ref(params, s, q, probe, cfg, k=100) for s in shards]
+    d, i = merge_topk(jnp.stack([p[0] for p in per]),
+                      jnp.stack([p[1] for p in per]), 100)
+    _, ti = exact_search(vecs, q, 10)
+    r = float((i[:, :, None] == ti[:, None, :]).any(1).mean())
+    assert r > 0.9, f"R10@100 {r}"
+
+
+def test_nprobe_monotone_recall(small_index):
+    """More probed lists -> recall never degrades (paper Table 1 semantics)."""
+    cfg, params, shards, vecs = small_index
+    q = vecs[100:132] + 0.01
+    _, ti = exact_search(vecs, q, 10)
+    recalls = []
+    for nprobe in (1, 4, 16, 32):
+        _, probe = scan_ivf_index(params, q, nprobe=nprobe)
+        per = [search_shard_ref(params, s, q, probe, cfg, k=10)
+               for s in shards]
+        _, i = merge_topk(jnp.stack([p[0] for p in per]),
+                          jnp.stack([p[1] for p in per]), 10)
+        recalls.append(recall_at_k(i, ti))
+    assert all(b >= a - 1e-6 for a, b in zip(recalls, recalls[1:])), recalls
+
+
+def test_merged_equals_single_shard_run(small_index):
+    """Sharded search == unsharded search (disaggregation is lossless)."""
+    cfg, params, shards, vecs = small_index
+    one = build_shards(params, np.asarray(vecs),
+                       IVFPQConfig(dim=cfg.dim, nlist=cfg.nlist, m=cfg.m,
+                                   list_cap=cfg.list_cap * 4), num_shards=1)
+    q = vecs[200:216]
+    _, probe = scan_ivf_index(params, q, nprobe=8)
+    per = [search_shard_ref(params, s, q, probe, cfg, k=10) for s in shards]
+    d4, i4 = merge_topk(jnp.stack([p[0] for p in per]),
+                        jnp.stack([p[1] for p in per]), 10)
+    d1, i1 = search_shard_ref(
+        params, one[0], q, probe,
+        IVFPQConfig(dim=cfg.dim, nlist=cfg.nlist, m=cfg.m,
+                    list_cap=cfg.list_cap * 4), 10)
+    np.testing.assert_allclose(np.asarray(d4), np.asarray(d1), rtol=1e-5)
+    assert (np.asarray(i4) == np.asarray(i1)).all()
+
+
+def test_adc_approximates_true_distance(small_index):
+    """PQ ADC distance ~ true L2^2 (quantization error bounded on
+    clustered data): rank correlation must be strongly positive."""
+    cfg, params, shards, vecs = small_index
+    q = vecs[300:308]
+    _, probe = scan_ivf_index(params, q, nprobe=32)
+    luts = ivfpq.compute_luts(params, q, probe, cfg)
+    codes = shards[0].codes[probe]
+    ids = shards[0].ids[probe]
+    d_adc = ivfpq.adc_scan_ref(luts, codes)
+    valid = np.asarray(ids) >= 0
+    da = np.asarray(d_adc)[valid]
+    iv = np.asarray(ids)[valid]
+    true_d = np.sum((np.asarray(q)[
+        np.repeat(np.arange(8), valid.reshape(8, -1).sum(-1))]
+        - np.asarray(vecs)[iv]) ** 2, -1)
+    corr = np.corrcoef(da, true_d)[0, 1]
+    assert corr > 0.9, corr
+
+
+@given(st.integers(2, 6), st.integers(1, 5), st.integers(3, 17))
+def test_merge_topk_is_global_topk(num_shards, nq, k):
+    """Property: merging per-shard top-k of disjoint candidate sets equals
+    the global top-k (the hierarchical aggregation invariant, paper step 8)."""
+    rng = np.random.default_rng(num_shards * 100 + nq * 10 + k)
+    per_shard = 2 * k + 3
+    d = rng.normal(size=(num_shards, nq, per_shard)).astype(np.float32)
+    ids = np.arange(num_shards * nq * per_shard, dtype=np.int32).reshape(
+        num_shards, nq, per_shard)
+    tops = []
+    for s in range(num_shards):
+        neg, pos = jax.lax.top_k(-jnp.asarray(d[s]), k)
+        tops.append((-neg, jnp.take_along_axis(jnp.asarray(ids[s]), pos, 1)))
+    md, mi = merge_topk(jnp.stack([t[0] for t in tops]),
+                        jnp.stack([t[1] for t in tops]), k)
+    flat_d = d.transpose(1, 0, 2).reshape(nq, -1)
+    ref = np.sort(flat_d, axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(md), ref, rtol=1e-6)
+
+
+def test_list_cap_overflow_raises():
+    key = jax.random.PRNGKey(1)
+    cfg = IVFPQConfig(dim=16, nlist=4, m=4, list_cap=8)
+    vecs = clustered_data(key, 512, 16, n_clusters=4)
+    params = train_ivfpq(key, vecs, cfg, kmeans_iters=4)
+    with pytest.raises(ValueError, match="cap"):
+        build_shards(params, np.asarray(vecs), cfg, num_shards=2)

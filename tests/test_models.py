@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement: reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.models import transformer as tf
+
+ARCHS = list(list_archs(include_paper=True))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    spec = get_arch(arch)
+    cfg = spec.reduced
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg)
+    B, T = 2, 16
+    batch = {"labels": jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                          cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (B, T, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(T)[None, None], (3, B, T)).astype(jnp.int32)
+    else:
+        batch["tokens"] = jax.random.randint(jax.random.PRNGKey(1), (B, T),
+                                             0, cfg.vocab_size)
+    if cfg.arch == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, 8, cfg.d_model), jnp.bfloat16)
+
+    # forward: shapes + finiteness
+    enc_states = (tf.encode(params, cfg, batch["enc_embeds"])
+                  if cfg.arch == "encdec" else None)
+    logits, _ = tf.forward(params, cfg, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"),
+                           positions=batch.get("positions"),
+                           enc_states=enc_states)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one train step: loss finite, grads finite, params move
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.lm_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """Prefill+decode must agree with train-mode forward on the same tokens."""
+    spec = get_arch(arch)
+    cfg = spec.reduced
+    if cfg.frontend == "vision":
+        pytest.skip("vision stub enters via embeds; covered by forward test")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    enc_states = None
+    enc_len = 0
+    if cfg.arch == "encdec":
+        enc = jax.random.normal(jax.random.PRNGKey(2), (B, 8, cfg.d_model),
+                                jnp.bfloat16)
+        enc_states = tf.encode(params, cfg, enc)
+        enc_len = 8
+    full, _ = tf.forward(params, cfg, tokens=toks, mode="train",
+                         enc_states=enc_states)
+    caches = tf.init_cache(cfg, B, max_seq=16, enc_len=enc_len)
+    pos = jnp.broadcast_to(jnp.arange(T - 1)[None], (B, T - 1))
+    if cfg.rope_mode == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, T - 1))
+    _, caches = tf.forward(params, cfg, tokens=toks[:, :-1], positions=pos,
+                           mode="prefill", caches=caches,
+                           enc_states=enc_states)
+    lg, _ = tf.decode_step(params, cfg, caches, toks[:, -1:],
+                           jnp.full((B,), T - 1), enc_states=enc_states)
+    # MoE capacity C depends on the token count, so prefill-vs-decode drop
+    # patterns may differ for a few boundary tokens (inherent to
+    # capacity-based dispatch) — compare distributions, not raw logits.
+    tol = 6e-2 if cfg.block == "moe" else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32), np.asarray(full[:, -1], np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_param_counts_match_published():
+    """Full configs reproduce the published parameter counts (±3%)."""
+    expect = {
+        "qwen2_0_5b": 0.49e9, "llama3_405b": 405e9, "phi3_mini_3_8b": 3.8e9,
+        "gemma3_4b": 3.88e9, "qwen2_vl_72b": 72e9, "dbrx_132b": 132e9,
+        "phi3_5_moe_42b": 41.9e9, "rwkv6_3b": 3.1e9, "dec_s": 101e6,
+        "dec_l": 1259e6,
+    }
+    for arch, want in expect.items():
+        got = get_arch(arch).model.param_count()
+        assert abs(got - want) / want < 0.03, (arch, got, want)
+
+
+def test_moe_active_params():
+    dbrx = get_arch("dbrx_132b").model
+    assert dbrx.active_param_count() < 0.3 * dbrx.param_count()
+
+
+def test_layer_pattern_classes():
+    g = get_arch("gemma3_4b").model
+    assert g.layer_classes().count("global") == 5   # 34 layers, 5:1 cycle
+    assert g.layer_classes().count("local") == 29
+    h = get_arch("hymba_1_5b").model
+    assert h.layer_classes().count("global") == 2   # period-16 cycle

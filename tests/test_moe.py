@@ -1,0 +1,92 @@
+"""MoE dispatch invariants (sort-based capacity dispatch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models.moe import load_balance_loss, moe_ffn, route_topk
+
+
+def dense_reference(x, router_w, w_gate, w_up, w_down, top_k):
+    """Compute-all-experts reference (no capacity drops)."""
+    w, ids = route_topk(x, router_w, top_k)
+    g = jnp.einsum("nd,edf->nef", x, w_gate)
+    u = jnp.einsum("nd,edf->nef", x, w_up)
+    y_all = jnp.einsum("nef,efd->ned", jax.nn.silu(g) * u, w_down)
+    out = jnp.zeros_like(x)
+    for j in range(top_k):
+        sel = jnp.take_along_axis(y_all, ids[:, j][:, None, None], axis=1)
+        out = out + w[:, j][:, None] * sel[:, 0]
+    return out
+
+
+@given(st.integers(0, 50), st.sampled_from([1, 2, 4]))
+def test_moe_matches_dense_reference(seed, top_k):
+    """With generous capacity (no drops), sorted dispatch == dense compute."""
+    N, d, f, E = 64, 16, 32, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (N, d), jnp.float32)
+    rw = jax.random.normal(ks[1], (d, E), jnp.float32)
+    wg = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.1
+    got = moe_ffn(x, rw, wg, wu, wd, top_k, capacity_factor=float(E))
+    want = dense_reference(x, rw, wg, wu, wd, top_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_capacity_dropping_bounded():
+    """With tight capacity, output is a (weighted) subset — never junk."""
+    N, d, f, E, top_k = 128, 8, 16, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (N, d), jnp.float32)
+    rw = jax.random.normal(ks[1], (d, E), jnp.float32)
+    wg = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.1
+    tight = moe_ffn(x, rw, wg, wu, wd, top_k, capacity_factor=0.5)
+    loose = moe_ffn(x, rw, wg, wu, wd, top_k, capacity_factor=8.0)
+    assert np.isfinite(np.asarray(tight)).all()
+    # tight output norm <= loose output norm + eps (drops only remove mass)
+    tn = float(jnp.sum(tight * tight))
+    ln = float(jnp.sum(loose * loose))
+    assert tn <= ln * 1.05
+
+
+def test_router_weights_normalized():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    rw = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+    w, ids = route_topk(x, rw, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(ids) < 4).all()
+    # top-k ids are distinct per token
+    assert (np.asarray(ids[:, 0]) != np.asarray(ids[:, 1])).all()
+
+
+def test_load_balance_loss_minimized_at_uniform():
+    """Aux loss >= 1 always, == ~1 for a perfectly uniform router."""
+    E = 4
+    x = jnp.eye(E).repeat(8, axis=0)                # 4 token groups
+    rw_uniform = jnp.zeros((E, E))
+    l_uni = float(load_balance_loss(x, rw_uniform, 1))
+    rw_collapsed = jnp.ones((E, E)) * jnp.array([10., 0, 0, 0])[None, :]
+    l_col = float(load_balance_loss(x, rw_collapsed, 1))
+    assert l_col > l_uni
+    assert l_uni >= 0.99
+
+
+def test_moe_grads_flow_to_all_used_experts():
+    N, d, f, E, top_k = 32, 8, 16, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (N, d), jnp.float32)
+    params = dict(
+        rw=jax.random.normal(ks[1], (d, E)),
+        wg=jax.random.normal(ks[2], (E, d, f)) * 0.1,
+        wu=jax.random.normal(ks[3], (E, d, f)) * 0.1,
+        wd=jax.random.normal(ks[4], (E, f, d)) * 0.1)
+    g = jax.grad(lambda p: jnp.sum(moe_ffn(
+        x, p["rw"], p["wg"], p["wu"], p["wd"], top_k) ** 2))(params)
+    per_expert = jnp.sum(jnp.abs(g["wd"]), axis=(1, 2))
+    assert (np.asarray(per_expert) > 0).all()

@@ -1,0 +1,86 @@
+"""Optimizer + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               clip_by_global_norm, init_opt_state,
+                               lr_schedule)
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, grad_clip=100.0,
+                      state_dtype="float32")
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params, cfg)
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.15)
+
+
+def test_bf16_states_still_converge():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, state_dtype="bfloat16")
+    target = jnp.array([0.5, -1.5])
+    params = {"w": jnp.zeros(2)}
+    state = init_opt_state(params, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.2)
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones(100) * 10}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 100.0) < 1e-3
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+    # below threshold: unchanged
+    g2 = {"a": jnp.ones(4) * 0.1}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.1, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(jnp.asarray(s), cfg)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-6          # peak at end of warmup
+    assert lrs[100] <= 1e-4 * 1.01             # decays to min ratio
+    assert all(b <= a + 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+@given(st.integers(0, 200))
+def test_int8_roundtrip_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * (seed + 1)
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    # deterministic rounding error <= scale/2 per element
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-6
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((20000,), 0.3)
+    q, scale = quantize_int8(x * 100, key=jax.random.PRNGKey(0))
+    back = dequantize_int8(q, scale)
+    assert abs(float(back.mean()) - 30.0) < 0.05
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                      total_steps=10, state_dtype="float32")
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    state = init_opt_state(params, cfg)
+    p2, _, _ = apply_updates(params, g, state, cfg)
+    assert float(p2["w"].mean()) < 1.0      # decayed
+    assert float(p2["b"].mean()) == 1.0     # not decayed

@@ -1,0 +1,92 @@
+"""RALM integration math (kNN-LM interpolation, retrieval scheduling)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.rag import (gather_payload, knnlm_interpolate,
+                            retro_neighbor_tokens, should_retrieve)
+
+
+def test_lambda_zero_recovers_lm():
+    B, V, K = 4, 32, 8
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, V))
+    d = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (B, K)))
+    t = jax.random.randint(jax.random.PRNGKey(2), (B, K), 0, V)
+    out = knnlm_interpolate(logits, d, t, lam=0.0, temperature=1.0)
+    want = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lambda_one_single_neighbor_is_spike():
+    B, V = 2, 16
+    logits = jnp.zeros((B, V))
+    d = jnp.full((B, 1), 0.5)
+    t = jnp.array([[3], [7]])
+    out = knnlm_interpolate(logits, d, t, lam=1.0, temperature=1.0)
+    p = np.exp(np.asarray(out))
+    assert p[0, 3] > 0.999 and p[1, 7] > 0.999
+
+
+@given(st.integers(0, 100), st.floats(0.0, 1.0), st.floats(0.5, 50.0))
+def test_output_is_distribution(seed, lam, temp):
+    B, V, K = 3, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    logits = jax.random.normal(ks[0], (B, V)) * 3
+    d = jnp.abs(jax.random.normal(ks[1], (B, K))) * 10
+    t = jax.random.randint(ks[2], (B, K), 0, V)
+    out = knnlm_interpolate(logits, d, t, lam=lam, temperature=temp)
+    p = np.exp(np.asarray(out, np.float64))
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-3)
+    assert (p >= 0).all()
+
+
+def test_missing_neighbors_graceful():
+    """Rows whose every neighbor is missing fall back to the pure LM."""
+    B, V, K = 2, 16, 4
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, V))
+    d = jnp.stack([jnp.full((K,), jnp.inf),
+                   jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (K,)))])
+    t = jnp.stack([jnp.full((K,), -1, jnp.int32),
+                   jax.random.randint(jax.random.PRNGKey(2), (K,), 0, V)])
+    out = knnlm_interpolate(logits, d, t, lam=0.5, temperature=1.0)
+    want0 = jax.nn.log_softmax(logits[0].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want0),
+                               rtol=1e-4, atol=1e-5)
+    assert not np.isnan(np.asarray(out)).any()
+
+
+def test_closer_neighbors_weigh_more():
+    V = 8
+    logits = jnp.zeros((1, V))
+    d = jnp.array([[0.1, 5.0]])
+    t = jnp.array([[2, 5]])
+    out = knnlm_interpolate(logits, d, t, lam=0.9, temperature=1.0)
+    p = np.exp(np.asarray(out[0]))
+    assert p[2] > p[5]
+
+
+def test_retrieval_schedule():
+    assert bool(should_retrieve(jnp.asarray(0), 1))
+    assert bool(should_retrieve(jnp.asarray(17), 1))
+    assert bool(should_retrieve(jnp.asarray(0), 8))
+    assert bool(should_retrieve(jnp.asarray(8), 8))
+    assert not bool(should_retrieve(jnp.asarray(5), 8))
+    # paper Table 2 intervals
+    for interval in (8, 64, 512):
+        fires = sum(bool(should_retrieve(jnp.asarray(s), interval))
+                    for s in range(512))
+        assert fires == 512 // interval
+
+
+def test_payload_gather_and_chunks():
+    table = jnp.arange(10, dtype=jnp.int32)
+    ids = jnp.array([[0, 9, -1]])
+    got = gather_payload(table, ids)
+    assert got[0, 0] == 0 and got[0, 1] == 9
+    chunks = jnp.arange(40, dtype=jnp.int32).reshape(10, 4)
+    ct = retro_neighbor_tokens(chunks, ids)
+    assert ct.shape == (1, 3, 4)
+    assert (np.asarray(ct[0, 2]) == 0).all()      # missing -> PAD
+    assert (np.asarray(ct[0, 1]) == np.arange(36, 40)).all()
