@@ -202,6 +202,58 @@ def fig11_fig12_ralm() -> List[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Fig. 12 (measured) — end-to-end serving throughput on this host through
+# the unified repro.serve engine (desk scale; grounds the modeled rows)
+# ---------------------------------------------------------------------------
+
+def fig12_measured_serving() -> List[Dict]:
+    """Serve pipelined request batches through ``RalmEngine`` (monolithic
+    on this host's devices) and report measured tokens/s, with and
+    without retrieval — the measured counterpart of the Fig. 12 model."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models import transformer as tf
+    from repro.serve import DatastoreBuilder, RagConfig, RalmEngine
+
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, 64, size=(64, 32), dtype=np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8,
+                          list_cap=512).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+
+    rows = []
+    steps, batch, n_req = 16, 4, 2
+    prompts = [jnp.asarray(rng.integers(0, 64, size=(batch, 8),
+                                        dtype=np.int32))
+               for _ in range(n_req)]
+    for tag, rag in (("norag", RagConfig(mode="none")),
+                     ("knnlm_iv1", RagConfig(mode="knnlm", interval=1,
+                                             k=8, lam=0.25))):
+        # pin max_seq so the KV-cache shape (and thus the compiled
+        # programs) is identical between warmup and the timed run
+        engine = RalmEngine.monolithic(params, cfg, rag,
+                                       retriever=ds.retriever(ccfg),
+                                       max_seq=8 + steps)
+        engine.generate_batches(prompts, steps=2)       # compile warmup
+        t0 = time.perf_counter()
+        engine.generate_batches(prompts, steps=steps)
+        dt = time.perf_counter() - t0
+        ntok = n_req * batch * steps
+        rows.append(dict(
+            name=f"fig12_measured/dec_s/{tag}",
+            us_per_call=dt / ntok * 1e6,
+            derived=(f"measured;tokens_per_s={ntok/dt:.1f};"
+                     f"requests={n_req};batch={batch}")))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Fig. 13 — optimal LM:retrieval accelerator ratio
 # ---------------------------------------------------------------------------
 

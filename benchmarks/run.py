@@ -21,6 +21,7 @@ def main() -> None:
         ("fig10", pf.fig10_scaleout),
         ("table5", pf.table5_energy),
         ("fig11_fig12", pf.fig11_fig12_ralm),
+        ("fig12_measured", pf.fig12_measured_serving),
         ("fig13", pf.fig13_accelerator_ratio),
         ("roofline", roofline.roofline_rows),
     ]

@@ -1,13 +1,17 @@
-"""End-to-end RALM serving (paper Fig. 3 workflow) with batched requests.
+"""End-to-end RALM serving (paper Fig. 3 workflow) with batched requests,
+through the unified ``repro.serve`` API.
 
 Demonstrates the paper's central behavioural claim at desk scale: an
 UNTRAINED tiny LM + a retrieval datastore reproduces memorized sequences,
 because the knowledge lives in the database, not the weights (knowledge
-editing without retraining, paper §1).
+editing without retraining, paper §1). The same ``RalmEngine`` runs
+monolithic (one mesh) or disaggregated (LM pool + retrieval pool) —
+identical tokens either way.
 
     PYTHONPATH=src python examples/serve_ralm.py [--disaggregate]
 """
 import argparse
+import dataclasses
 import sys
 sys.path.insert(0, "src")
 
@@ -16,18 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.chamvs import ChamVSConfig
-from repro.core.generate import RetrievalEngine, generate
-from repro.core.ivfpq import IVFPQConfig, build_shards, train_ivfpq
-from repro.core.rag import RagConfig
 from repro.models import transformer as tf
+from repro.serve import DatastoreBuilder, RagConfig, RalmEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--disaggregate", action="store_true")
 args = ap.parse_args()
 
 # tiny decoder RALM (paper Dec-S family, reduced)
-import dataclasses
 cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
 params = tf.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -39,36 +39,37 @@ for _ in range(31):
     seqs.append((3 * seqs[-1] + 1) % 64)
 corpus = np.stack(seqs, axis=1).astype(np.int32)
 
+# deployment shape first: disaggregated needs one datastore shard per
+# retrieval-pool device (memory node)
+disaggregate = args.disaggregate and len(jax.devices()) >= 2
+ret_devices = min(2, len(jax.devices()) - 1) if disaggregate else 1
+num_shards = ret_devices if disaggregate else 2
+
 # datastore: hidden state of every prefix -> next token (kNN-LM, interval 1)
-_, _, hidden = tf.forward(params, cfg, tokens=jnp.asarray(corpus),
-                          mode="train", return_hidden=True)
-keys = np.asarray(hidden[:, :-1].astype(jnp.float32)).reshape(-1, cfg.d_model)
-payload = jnp.asarray(corpus[:, 1:].reshape(-1))
-icfg = IVFPQConfig(dim=cfg.d_model, nlist=8, m=8, list_cap=512)
-db = train_ivfpq(jax.random.PRNGKey(1), jnp.asarray(keys), icfg,
-                 kmeans_iters=8)
-shards = build_shards(db, keys, icfg, num_shards=2)
-ccfg = ChamVSConfig(ivfpq=icfg, nprobe=4, k=8, backend="ref")
-print(f"datastore: {keys.shape[0]} vectors, 2 memory nodes, "
-      f"k'={ccfg.k_prime(2)}")
+ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8, list_cap=512,
+                      num_shards=num_shards).from_corpus(params, cfg, corpus)
+ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+print(f"datastore: {ds.num_vectors} vectors, {ds.num_shards} memory nodes, "
+      f"k'={ccfg.k_prime(ds.num_shards)}")
 
 rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999, temperature=1.0)
 
-if args.disaggregate and len(jax.devices()) >= 2:
-    from repro.core.coordinator import DisaggregatedRuntime
-    rt = DisaggregatedRuntime(cfg, rag, params, db, shards, ccfg,
-                              payload_tokens=payload, lm_devices=1,
-                              ret_devices=1)
-    outs = rt.generate_pipelined([jnp.asarray(corpus[:4, :8]),
-                                  jnp.asarray(corpus[4:8, :8])], steps=8)
-    out = outs[0]
-    print(f"disaggregated pools: LM={rt.lm_mesh.devices.size} dev, "
-          f"retrieval={rt.ret_mesh.devices.size} dev")
+if disaggregate:
+    engine = RalmEngine.disaggregated(
+        params, cfg, rag, ds.params, ds.shards, ccfg,
+        payload_tokens=ds.payload_tokens, lm_devices=1,
+        ret_devices=ret_devices)
+    print(f"disaggregated pools: "
+          f"LM={engine.backend.lm_mesh.devices.size} dev, "
+          f"retrieval={engine.backend.ret_mesh.devices.size} dev")
 else:
-    engine = RetrievalEngine(params=db, shards=shards, cfg=ccfg,
-                             payload_tokens=payload)
-    out = np.asarray(generate(params, cfg, rag, jnp.asarray(corpus[:4, :8]),
-                              steps=8, engine=engine))
+    engine = RalmEngine.monolithic(params, cfg, rag,
+                                   retriever=ds.retriever(ccfg))
+
+# two request batches in flight at once: the scheduler pipelines them
+outs = engine.generate_batches([jnp.asarray(corpus[:4, :8]),
+                                jnp.asarray(corpus[4:8, :8])], steps=8)
+out = outs[0]
 
 acc = (out[:, 8:16] == corpus[:4, 8:16]).mean()
 print(f"retrieval-augmented continuation accuracy: {acc:.2f} "

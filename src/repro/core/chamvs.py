@@ -33,11 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
+from repro.compat import shard_map
 from repro.core import ivfpq
 from repro.core.approx_topk_math import truncated_queue_len
 from repro.core.ivfpq import IVFPQConfig, IVFPQParams, IVFPQShard

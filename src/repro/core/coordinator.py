@@ -1,63 +1,37 @@
-"""The disaggregated runtime (paper §3: CPU coordinator + independent
-accelerator pools).
+"""Compatibility shim over ``repro.serve`` (the old disaggregated entry
+point).
 
-Chameleon's core system claim is that LM accelerators and retrieval
-accelerators must scale *independently* because the optimal ratio between
-them varies by orders of magnitude across RALM configs (Fig. 13). This
-module realizes that on a JAX device set:
+The paper's CPU-coordinator + independent-accelerator-pools runtime
+(§3) now lives in ``repro.serve``:
 
-  * the device set is split into an **LM pool** and a **retrieval pool**
-    (the ratio is a constructor argument — the Fig. 13 knob);
-  * each pool gets its own mesh and its own compiled programs (decode_step
-    on the LM pool; ChamVS distributed search on the retrieval pool);
-  * the coordinator pipelines multiple request batches: while batch A's
-    queries are being searched on the retrieval pool, batch B decodes on
-    the LM pool (the paper's multi-process ChamLM overlap). JAX dispatch is
-    async, so interleaved submission yields real overlap on real hardware;
-  * vector-ID -> payload conversion happens on the coordinator host
-    (paper step 9).
+  * pool split + timed decode  -> ``serve.engine.DisaggregatedBackend``
+  * distributed search/gather  -> ``serve.api.DistributedRetriever``
+  * the pipelined loop         -> ``serve.scheduler.RalmScheduler``
+  * Fig. 13 ratio tracking     -> ``serve.engine.PoolTimes``
 
-For kNN-LM (interval 1) the within-sequence dependency decode -> search ->
-interpolate -> sample is fundamental (the paper's Fig. 11 latency plots show
-it); cross-batch pipelining is where disaggregation wins throughput
-(Fig. 12), which benchmarks/fig12_throughput.py measures.
+``DisaggregatedRuntime`` keeps the historical constructor and
+``generate_pipelined`` surface on top of a ``RalmEngine``; new code
+should build the engine directly (``RalmEngine.disaggregated`` or
+``RalmEngine.from_config``).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chamvs as chamvs_lib
-from repro.core import rag as rag_lib
 from repro.core.chamvs import ChamVSConfig
 from repro.core.ivfpq import IVFPQParams, IVFPQShard
 from repro.core.rag import RagConfig
-from repro.models import transformer as tf
 from repro.models.config import ModelConfig
-from repro.launch.mesh import make_mesh_for
+from repro.serve.engine import PoolTimes, RalmEngine
 
-
-@dataclasses.dataclass
-class PoolTimes:
-    decode_s: List[float] = dataclasses.field(default_factory=list)
-    search_s: List[float] = dataclasses.field(default_factory=list)
-
-    def optimal_ratio(self) -> float:
-        """Paper Fig. 13: LM-pool units needed to saturate one retrieval
-        engine = (retrieval throughput) / (decode throughput) per batch."""
-        if not self.decode_s or not self.search_s:
-            return float("nan")
-        return float(np.median(self.decode_s) / np.median(self.search_s))
+__all__ = ["DisaggregatedRuntime", "PoolTimes"]
 
 
 class DisaggregatedRuntime:
-    """Two device pools + pipelined batches.
+    """Deprecated facade over ``RalmEngine.disaggregated``.
 
     lm_devices / ret_devices: device counts for each pool (must sum to at
     most len(jax.devices())). Retrieval pool axes: ("data",) memory nodes.
@@ -69,96 +43,35 @@ class DisaggregatedRuntime:
                  payload_tokens: Optional[jnp.ndarray] = None,
                  lm_devices: int = 1, ret_devices: int = 1,
                  query_proj: Optional[jnp.ndarray] = None):
-        devs = jax.devices()
-        assert lm_devices + ret_devices <= len(devs), (
-            lm_devices, ret_devices, len(devs))
         self.cfg, self.rag = cfg, rag
-        self.params = params
-        self.payload_tokens = payload_tokens
-        self.query_proj = query_proj
-        self.times = PoolTimes()
+        self.engine = RalmEngine.disaggregated(
+            params, cfg, rag, db_params, db_shards, chamvs_cfg,
+            payload_tokens=payload_tokens, lm_devices=lm_devices,
+            ret_devices=ret_devices, query_proj=query_proj)
 
-        # LM pool: pure data-parallel decode (each unit = one "GPU process")
-        self.lm_mesh = make_mesh_for(devs[:lm_devices], data=lm_devices)
-        # Retrieval pool: ChamVS memory nodes over its own mesh
-        self.ret_mesh = make_mesh_for(devs[lm_devices:lm_devices + ret_devices],
-                                      data=ret_devices)
-        self.chamvs_cfg = chamvs_cfg
-        assert len(db_shards) == ret_devices, "one shard per memory node"
-        stacked = chamvs_lib.stack_shards(db_shards)
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        self.db_params = jax.device_put(
-            db_params, NamedSharding(self.ret_mesh, P()))
-        self.db_shard = jax.device_put(
-            stacked, NamedSharding(self.ret_mesh, P("data")))
-        self._search = jax.jit(chamvs_lib.make_distributed_search(
-            self.ret_mesh, chamvs_cfg, db_axes=("data",), query_axis=None))
+    @property
+    def times(self) -> PoolTimes:
+        return self.engine.times
 
-        def _decode(params, caches, token, position):
-            return tf.decode_step(params, self.cfg, caches, token, position,
-                                  return_hidden=True)
+    @property
+    def lm_mesh(self):
+        return self.engine.backend.lm_mesh
 
-        self._decode = jax.jit(_decode)
+    @property
+    def ret_mesh(self):
+        return self.engine.backend.ret_mesh
 
     # ------------------------------------------------------------------
     def search(self, queries: jnp.ndarray):
-        q = jnp.asarray(queries, jnp.float32)
-        if self.query_proj is not None:
-            q = q @ self.query_proj
-        t0 = time.time()
-        with jax.set_mesh(self.ret_mesh):
-            d, i = self._search(self.db_params, self.db_shard, q)
-        d.block_until_ready()
-        self.times.search_s.append(time.time() - t0)
-        return d, i
+        return self.engine._search(jnp.asarray(queries, jnp.float32))
 
     def decode(self, caches, token, position):
-        t0 = time.time()
-        with jax.set_mesh(self.lm_mesh):
-            logits, caches, hidden = self._decode(self.params, caches,
-                                                  token, position)
-        logits.block_until_ready()
-        self.times.decode_s.append(time.time() - t0)
-        return logits, caches, hidden
+        return self.engine.backend.decode(caches, token, position)
 
     # ------------------------------------------------------------------
     def generate_pipelined(self, prompts: List[jnp.ndarray], steps: int
                            ) -> List[np.ndarray]:
-        """Round-robin decode/search across request batches (paper's
-        coordinator loop). Each entry of ``prompts`` is one batch [B, T0]."""
-        states = []
-        for prompt in prompts:
-            B, T0 = prompt.shape
-            caches = tf.init_cache(self.cfg, B, max_seq=T0 + steps)
-            pos = jnp.broadcast_to(jnp.arange(T0)[None], (B, T0))
-            with jax.set_mesh(self.lm_mesh):
-                _, caches = tf.forward(self.params, self.cfg, tokens=prompt,
-                                       positions=pos, mode="prefill",
-                                       caches=caches)
-            states.append(dict(caches=caches, out=[prompt],
-                               cur=prompt[:, -1:], t0=T0))
-        for s in range(steps):
-            # stage 1: decode every batch (async dispatch per batch)
-            pending = []
-            for st in states:
-                B = st["cur"].shape[0]
-                position = jnp.full((B,), st["t0"] + s - 1, jnp.int32)
-                logits, st["caches"], hidden = self.decode(
-                    st["caches"], st["cur"], position)
-                pending.append((st, logits, hidden))
-            # stage 2: retrieval for all batches (overlaps next decode on HW)
-            for st, logits, hidden in pending:
-                out = logits
-                if self.rag.mode == "knnlm" and \
-                        (s % max(self.rag.interval, 1)) == 0:
-                    dists, ids = self.search(hidden)
-                    toks = rag_lib.gather_payload(self.payload_tokens, ids)
-                    toks = jnp.where(ids >= 0, toks, -1)
-                    out = rag_lib.knnlm_interpolate(
-                        logits, dists, toks, self.rag.lam,
-                        self.rag.temperature)
-                nxt = jnp.argmax(out, axis=-1).astype(jnp.int32)
-                st["cur"] = nxt[:, None]
-                st["out"].append(st["cur"])
-        return [np.asarray(jnp.concatenate(st["out"], axis=1))
-                for st in states]
+        """Pipelined decode/search across request batches — now the
+        scheduler's two-phase step. Each entry of ``prompts`` is one
+        batch [B, T0]."""
+        return self.engine.generate_batches(prompts, steps)

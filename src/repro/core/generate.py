@@ -1,47 +1,34 @@
-"""Token-generation driver (paper Fig. 3 workflow, single-mesh/monolithic).
+"""Compatibility shim over ``repro.serve`` (the old monolithic entry
+point).
 
-Implements the paper's two RALM loops:
-  * decoder-only, interval 1: every step retrieves with the hidden state and
-    interpolates next-token distributions (kNN-LM);
-  * encoder-decoder, interval N: every N steps the hidden state retrieves
-    text chunks, the shallow encoder re-encodes them, and the decoder
-    cross-attends until the next retrieval boundary (RETRO).
+The single-mesh generation loop that used to live here — and its
+divergent twin in ``core/coordinator.py`` — were unified into
+``repro.serve.engine.RalmEngine``; see ``docs/serving.md`` for the
+migration table. This module keeps the historical surface importable:
 
-The disaggregated variant of the same loop lives in ``core/coordinator.py``.
+  * ``RetrievalEngine`` — now an alias of ``repro.serve.LocalRetriever``
+    (same field layout, plus the ``resolve()`` required by the
+    ``Retriever`` protocol);
+  * ``generate(...)`` — same signature and semantics, implemented as a
+    one-request ``RalmEngine.monolithic`` run.
+
+New code should use ``repro.serve`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import rag as rag_lib
-from repro.core.chamvs import ChamVSConfig, search_single
-from repro.core.ivfpq import IVFPQParams, IVFPQShard
 from repro.core.rag import RagConfig
-from repro.models import transformer as tf
 from repro.models.config import ModelConfig
+from repro.serve.api import LocalRetriever
+from repro.serve.engine import RalmEngine
 
 
-@dataclasses.dataclass
-class RetrievalEngine:
-    """Host-facing handle on ChamVS (single-process flavor for tests and
-    examples; the distributed flavor plugs the shard_map search in)."""
-    params: IVFPQParams
-    shards: list
-    cfg: ChamVSConfig
-    payload_tokens: Optional[jnp.ndarray] = None   # [N] next-token table
-    chunk_table: Optional[jnp.ndarray] = None      # [N, chunk_len]
-    query_proj: Optional[jnp.ndarray] = None       # [d_model, dq]
-
-    def search(self, queries: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        q = queries.astype(jnp.float32)
-        if self.query_proj is not None:
-            q = q @ self.query_proj
-        return search_single(self.params, self.shards, q, self.cfg)
+class RetrievalEngine(LocalRetriever):
+    """Deprecated name for ``repro.serve.LocalRetriever``."""
 
 
 def generate(
@@ -50,7 +37,7 @@ def generate(
     rag: RagConfig,
     prompt: jnp.ndarray,               # [B, T0] int32
     steps: int,
-    engine: Optional[RetrievalEngine] = None,
+    engine: Optional[LocalRetriever] = None,
     max_seq: Optional[int] = None,
     greedy: bool = True,
     rng: Optional[jax.Array] = None,
@@ -58,66 +45,8 @@ def generate(
 ) -> jnp.ndarray:
     """Generate ``steps`` tokens after ``prompt``. Returns [B, T0+steps].
 
-    ``trace``: optional list collecting per-step dicts (retrieved ids etc.)
-    for the benchmarks."""
-    B, T0 = prompt.shape
-    max_seq = max_seq or (T0 + steps)
-    enc_len = rag.k * rag.chunk_len if rag.mode == "retro" else 0
-    caches = tf.init_cache(cfg, B, max_seq=max_seq, enc_len=0)
-
-    enc_states = None
-    if cfg.arch == "encdec":
-        # initial encoder pass over an empty/neutral chunk set
-        neutral = jnp.zeros((B, max(enc_len, 8)), jnp.int32)
-        enc_states = tf.encode(params, cfg, tf.embed_tokens(params, neutral))
-
-    pos = jnp.broadcast_to(jnp.arange(T0)[None], (B, T0))
-    if cfg.rope_mode == "mrope":
-        pos = jnp.broadcast_to(pos[None], (3, B, T0))
-    logits_last, caches = tf.forward(params, cfg, tokens=prompt,
-                                     positions=pos, mode="prefill",
-                                     caches=caches, enc_states=enc_states)
-    logits_last = logits_last[:, None] if logits_last.ndim == 2 else logits_last
-
-    out = [prompt]
-    cur = prompt[:, -1:]
-    last_logits = None
-    for s in range(steps):
-        position = jnp.full((B,), T0 + s - 1 if s > 0 else T0 - 1, jnp.int32)
-        if s == 0:
-            # prefill already consumed the prompt; decode the first new token
-            # from the prefill logits' hidden? — simplest: run decode on the
-            # final prompt token again is wrong; instead sample from prefill
-            # logits directly.
-            step_logits = logits_last[:, -1]
-            hidden = None
-        else:
-            step_logits, caches, hidden = tf.decode_step(
-                params, cfg, caches, cur, position, enc_states=enc_states,
-                return_hidden=True)
-        log_or_prob = step_logits
-        if engine is not None and rag.mode != "none" and \
-                bool(rag_lib.should_retrieve(jnp.asarray(s), rag.interval)):
-            if hidden is None:
-                # use embedding of current token as a stand-in query at s=0
-                hidden = tf.embed_tokens(params, cur)[:, 0]
-            dists, ids = engine.search(hidden)
-            if trace is not None:
-                trace.append(dict(step=s, ids=np.asarray(ids)))
-            if rag.mode == "knnlm":
-                toks = rag_lib.gather_payload(engine.payload_tokens, ids)
-                toks = jnp.where(ids >= 0, toks, -1)
-                log_or_prob = rag_lib.knnlm_interpolate(
-                    step_logits, dists, toks, rag.lam, rag.temperature)
-            elif rag.mode == "retro" and cfg.arch == "encdec":
-                chunks = rag_lib.retro_neighbor_tokens(engine.chunk_table, ids)
-                emb = tf.embed_tokens(params, chunks.reshape(B, -1))
-                enc_states = tf.encode(params, cfg, emb)
-        if greedy or rng is None:
-            nxt = jnp.argmax(log_or_prob, axis=-1).astype(jnp.int32)
-        else:
-            rng, k = jax.random.split(rng)
-            nxt = jax.random.categorical(k, log_or_prob).astype(jnp.int32)
-        cur = nxt[:, None]
-        out.append(cur)
-    return jnp.concatenate(out, axis=1)
+    ``trace``: optional list collecting per-step dicts (retrieved ids
+    etc.) for the benchmarks."""
+    ralm = RalmEngine.monolithic(params, cfg, rag, retriever=engine,
+                                 max_seq=max_seq)
+    return ralm.generate(prompt, steps, greedy=greedy, rng=rng, trace=trace)

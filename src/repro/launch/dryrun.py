@@ -11,6 +11,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import use_mesh
 from repro.configs import SHAPES, get_arch, list_archs
 from repro.launch import specs as specs_lib
 from repro.launch import steps as steps_lib
@@ -39,7 +40,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     cfg = spec.model
     kind = SHAPES[shape]["kind"]
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if kind == "train":
             jitted, _, _ = steps_lib.build_train_step(spec, shape, mesh)
             p = _abstract_params(cfg)

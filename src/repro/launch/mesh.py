@@ -8,7 +8,8 @@ import; smoke tests and benchmarks see the real single CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,8 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     and the ChamVS k'-truncated result aggregation target it."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices=None, data: int = 1, model: int = 1,

@@ -1,9 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Builds a small RALM deployment end-to-end on the local devices: trains an
-IVF-PQ index over a synthetic datastore, splits devices into LM/retrieval
-pools (disaggregated mode) or keeps one mesh (monolithic), then serves
-batched generation requests with retrieval at the configured interval.
+Builds a small RALM deployment end-to-end on the local devices through
+the unified ``repro.serve`` API: a ``DatastoreBuilder`` indexes a
+synthetic datastore, an ``EngineConfig`` picks monolithic (one mesh) or
+disaggregated (LM pool + retrieval pool) deployment, and the engine's
+scheduler pipelines the request batches.
 """
 from __future__ import annotations
 
@@ -15,28 +16,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.chamvs import ChamVSConfig
-from repro.core.coordinator import DisaggregatedRuntime
-from repro.core.generate import RetrievalEngine, generate
-from repro.core.ivfpq import IVFPQConfig, build_shards, train_ivfpq
-from repro.models import transformer as tf
+from repro.serve import (DatastoreBuilder, EngineConfig, RalmEngine,
+                         RalmRequest)
 
 
 def build_datastore(params, cfg, rng, n_docs=64, doc_len=32, num_shards=2):
-    """kNN-LM datastore from the model's own hidden states over a corpus."""
+    """kNN-LM datastore over a synthetic corpus. Returns a
+    ``repro.serve.Datastore`` (the build recipe itself lives in
+    ``DatastoreBuilder``)."""
     corpus = rng.integers(0, cfg.vocab_size, size=(n_docs, doc_len),
                           dtype=np.int32)
-    _, _, hidden = tf.forward(params, cfg, tokens=jnp.asarray(corpus),
-                              mode="train", return_hidden=True)
-    keys = np.asarray(hidden[:, :-1].astype(jnp.float32)).reshape(
-        -1, cfg.d_model)
-    nxt = corpus[:, 1:].reshape(-1)
-    icfg = IVFPQConfig(dim=cfg.d_model, nlist=8,
-                       m=max(cfg.d_model // 16, 4), list_cap=1024)
-    db_params = train_ivfpq(jax.random.PRNGKey(1), jnp.asarray(keys), icfg,
-                            kmeans_iters=8)
-    shards = build_shards(db_params, keys, icfg, num_shards=num_shards)
-    return db_params, shards, icfg, jnp.asarray(nxt)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8,
+                          num_shards=num_shards).from_corpus(
+                              params, cfg, corpus)
+    return ds
 
 
 def main() -> None:
@@ -51,37 +44,44 @@ def main() -> None:
                     help="split devices into LM + retrieval pools")
     args = ap.parse_args()
 
+    from repro.models import transformer as tf
     spec = get_arch(args.arch)
     cfg = spec.reduced if args.reduced else spec.model
     rag = spec.rag
     rng = np.random.default_rng(0)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    db_params, shards, icfg, payload = build_datastore(params, cfg, rng)
-    ccfg = ChamVSConfig(ivfpq=icfg, nprobe=4, k=min(rag.k, 8), backend="ref")
 
-    prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size, size=(args.batch, 8),
-                                        dtype=np.int32))
+    disaggregate = args.disaggregate and len(jax.devices()) >= 2
+    ret_devices = min(2, len(jax.devices()) - 1) if disaggregate else 1
+    ds = build_datastore(params, cfg, rng,
+                         num_shards=ret_devices if disaggregate else 2)
+    ccfg = ds.search_config(nprobe=4, k=min(rag.k, 8), backend="ref")
+
+    econfig = EngineConfig(model=cfg, rag=rag, disaggregate=disaggregate,
+                           lm_devices=1, ret_devices=ret_devices)
+    engine = RalmEngine.from_config(econfig, params, ds, ccfg)
+
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                        size=(args.batch, 8), dtype=np.int32))
                for _ in range(args.requests)]
     t0 = time.time()
-    if args.disaggregate and len(jax.devices()) >= 2:
-        rt = DisaggregatedRuntime(
-            cfg, rag, params, db_params, shards, ccfg,
-            payload_tokens=payload, lm_devices=1,
-            ret_devices=min(len(shards), len(jax.devices()) - 1))
-        outs = rt.generate_pipelined(prompts, steps=args.steps)
-        print(f"[serve] disaggregated: {len(outs)} batches x "
-              f"{outs[0].shape} in {time.time()-t0:.2f}s; "
-              f"optimal LM:retrieval ratio estimate "
-              f"{rt.times.optimal_ratio():.2f}")
-    else:
-        engine = RetrievalEngine(params=db_params, shards=shards, cfg=ccfg,
-                                 payload_tokens=payload)
-        for i, prompt in enumerate(prompts):
-            out = generate(params, cfg, rag, prompt, steps=args.steps,
-                           engine=engine)
-            print(f"[serve] monolithic batch {i}: {out.shape} "
-                  f"last tokens {np.asarray(out[:, -4:]).tolist()}")
-        print(f"[serve] total {time.time()-t0:.2f}s")
+    for prompt in prompts:
+        engine.submit(RalmRequest(prompt=prompt, steps=args.steps))
+    responses = engine.run()
+    dt = time.time() - t0
+
+    mode = engine.backend.name
+    for resp in responses:
+        print(f"[serve] {mode} request {resp.request_id}: "
+              f"{resp.tokens.shape} last tokens "
+              f"{resp.tokens[:, -4:].tolist()}")
+    ntok = sum(r.tokens.shape[0] * r.steps for r in responses)
+    line = f"[serve] {mode}: {len(responses)} batches, {ntok} tokens in " \
+           f"{dt:.2f}s ({ntok/dt:.1f} tok/s)"
+    if engine.times is not None:
+        line += (f"; optimal LM:retrieval ratio estimate "
+                 f"{engine.times.optimal_ratio():.2f}")
+    print(line)
 
 
 if __name__ == "__main__":

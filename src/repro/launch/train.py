@@ -12,6 +12,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro.compat import use_mesh
 from repro.configs import SHAPES, get_arch
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_mesh_for
@@ -42,7 +43,7 @@ def main() -> None:
     ocfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                              total_steps=args.steps)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = tf.init_params(jax.random.PRNGKey(0), cfg)
         p_specs = sanitize(param_specs(cfg, mesh), params, mesh)
         params = put_named(params, p_specs, mesh)

@@ -1,0 +1,31 @@
+"""``repro.serve`` — the unified RALM serving API.
+
+One ``Retriever`` protocol, one generation loop, pluggable
+monolithic/disaggregated backends::
+
+    from repro.serve import (DatastoreBuilder, RagConfig, RalmEngine)
+
+    ds = DatastoreBuilder(dim=cfg.d_model).from_corpus(params, cfg, corpus)
+    engine = RalmEngine.monolithic(
+        params, cfg, rag, retriever=ds.retriever(ds.search_config(k=8)))
+    tokens = engine.generate(prompt, steps=8)
+
+See ``docs/serving.md`` for the API tour and the migration table from
+the old entry points.
+"""
+from repro.core.rag import RagConfig
+from repro.serve.api import (DistributedRetriever, EngineConfig,
+                             LocalRetriever, RalmRequest, RalmResponse,
+                             Retriever)
+from repro.serve.datastore import Datastore, DatastoreBuilder
+from repro.serve.engine import (DisaggregatedBackend, MonolithicBackend,
+                                PoolTimes, RalmEngine, SequenceState)
+from repro.serve.scheduler import RalmScheduler
+
+__all__ = [
+    "Datastore", "DatastoreBuilder", "DisaggregatedBackend",
+    "DistributedRetriever", "EngineConfig", "LocalRetriever",
+    "MonolithicBackend", "PoolTimes", "RagConfig", "RalmEngine",
+    "RalmRequest", "RalmResponse", "RalmScheduler", "Retriever",
+    "SequenceState",
+]

@@ -1,0 +1,213 @@
+"""The unified RALM serving surface (request/response types + the
+``Retriever`` protocol).
+
+Chameleon's system claim (paper §3) is that LM inference and vector
+search are independent services behind a narrow boundary. This module is
+that boundary as an API:
+
+  * ``RalmRequest`` / ``RalmResponse`` — one generation request (a batch
+    of prompts decoded in lockstep) and its result;
+  * ``EngineConfig`` — everything needed to stand an engine up;
+  * ``Retriever`` — the two-method protocol every retrieval service
+    implements: ``search(queries) -> (dists, ids)`` (paper steps 1-8) and
+    ``resolve(ids) -> payload`` (paper step 9, the vector-ID -> payload
+    conversion, with missing-id masking folded in so no caller ever
+    re-implements it);
+  * ``LocalRetriever`` — single-process ChamVS (tests, examples, builds);
+  * ``DistributedRetriever`` — ChamVS ``shard_map``-ed over a retrieval
+    mesh (the paper's disaggregated memory nodes), including the
+    sharded payload gather.
+
+Everything in ``repro.serve`` speaks only this protocol; monolithic and
+disaggregated deployments differ solely in which implementation is
+plugged in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import use_mesh
+from repro.core import chamvs as chamvs_lib
+from repro.core import rag as rag_lib
+from repro.core.chamvs import ChamVSConfig
+from repro.core.ivfpq import IVFPQParams, IVFPQShard
+from repro.core.rag import RagConfig
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# request / response / config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RalmRequest:
+    """One serving request: a prompt batch decoded in lockstep.
+
+    ``trace``: optional list collecting per-step dicts (retrieved ids
+    etc.) for benchmarks and tests, same contract as the old
+    ``generate(..., trace=)``."""
+    prompt: jnp.ndarray                  # [B, T0] int32
+    steps: int
+    greedy: bool = True
+    rng: Optional[jax.Array] = None
+    trace: Optional[list] = None
+    request_id: Optional[int] = None     # assigned at submit()
+
+
+@dataclasses.dataclass
+class RalmResponse:
+    request_id: int
+    tokens: np.ndarray                   # [B, T0 + steps]
+    steps: int
+    trace: Optional[list] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Deployment shape of one RALM engine (the Fig. 13 knobs)."""
+    model: ModelConfig
+    rag: RagConfig
+    max_seq: Optional[int] = None        # KV budget; default T0 + steps
+    disaggregate: bool = False           # split devices into two pools
+    lm_devices: int = 1                  # LM pool size (disaggregated)
+    ret_devices: int = 1                 # retrieval pool size (")
+    max_active: Optional[int] = None     # scheduler admission limit
+
+
+# ---------------------------------------------------------------------------
+# the Retriever protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Retriever(Protocol):
+    """What the engine needs from a retrieval service — nothing more.
+
+    ``resolve`` owns missing-id masking: ids < 0 come back as -1 tokens
+    (kind="tokens") or PAD-0 chunks (kind="chunks"), so the decode loop
+    never inspects ids itself."""
+
+    def search(self, queries: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """[B, d] queries -> (dists [B, K], global ids [B, K])."""
+        ...
+
+    def resolve(self, ids: jnp.ndarray, kind: str = "tokens"
+                ) -> jnp.ndarray:
+        """[B, K] ids -> payload: next-tokens [B, K] (kNN-LM) or chunks
+        [B, K, chunk_len] (RETRO), masked for missing ids."""
+        ...
+
+
+def _resolve_from_tables(payload_tokens, chunk_table, ids, kind,
+                         gather=rag_lib.gather_payload):
+    """Shared resolve() body: gather from the right table, mask missing
+    ids exactly once (the old loops each re-implemented this)."""
+    if kind == "tokens":
+        if payload_tokens is None:
+            raise ValueError("retriever has no payload_tokens table")
+        toks = gather(payload_tokens, ids)
+        return jnp.where(ids >= 0, toks, -1)
+    if kind == "chunks":
+        if chunk_table is None:
+            raise ValueError("retriever has no chunk_table")
+        chunks = gather(chunk_table, ids)
+        return jnp.where((ids >= 0)[..., None], chunks, 0)
+    raise ValueError(f"unknown payload kind: {kind!r}")
+
+
+@dataclasses.dataclass
+class LocalRetriever:
+    """Single-process ChamVS over a list of shards (tests, examples,
+    datastore builds). Field layout is the old ``RetrievalEngine``'s, so
+    existing constructors keep working through the compat shim."""
+    params: IVFPQParams
+    shards: List[IVFPQShard]
+    cfg: ChamVSConfig
+    payload_tokens: Optional[jnp.ndarray] = None   # [N] next-token table
+    chunk_table: Optional[jnp.ndarray] = None      # [N, chunk_len]
+    query_proj: Optional[jnp.ndarray] = None       # [d_model, dq]
+
+    def search(self, queries: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        q = queries.astype(jnp.float32)
+        if self.query_proj is not None:
+            q = q @ self.query_proj
+        return chamvs_lib.search_single(self.params, self.shards, q,
+                                        self.cfg)
+
+    def resolve(self, ids: jnp.ndarray, kind: str = "tokens"
+                ) -> jnp.ndarray:
+        return _resolve_from_tables(self.payload_tokens, self.chunk_table,
+                                    ids, kind)
+
+
+class DistributedRetriever:
+    """ChamVS over a retrieval mesh: ``make_distributed_search`` for the
+    query path and ``make_distributed_gather`` for payload resolution
+    (both tables sharded over ``db_axes``, so no host round-trip and no
+    full-table all-gather — see ``make_distributed_gather``'s docstring).
+    """
+
+    def __init__(self, mesh: Mesh, params: IVFPQParams,
+                 shards: List[IVFPQShard], cfg: ChamVSConfig,
+                 payload_tokens: Optional[jnp.ndarray] = None,
+                 chunk_table: Optional[jnp.ndarray] = None,
+                 query_proj: Optional[jnp.ndarray] = None,
+                 db_axes: Tuple[str, ...] = ("data",),
+                 query_axis: Optional[str] = None):
+        self.mesh, self.cfg = mesh, cfg
+        self.query_proj = query_proj
+        num_shards = 1
+        for a in db_axes:
+            if a in mesh.axis_names:
+                num_shards *= mesh.shape[a]
+        assert len(shards) == num_shards, \
+            f"one shard per memory node: {len(shards)} vs {num_shards}"
+        stacked = chamvs_lib.stack_shards(shards)
+        self.db_params = jax.device_put(params, NamedSharding(mesh, P()))
+        self.db_shard = jax.device_put(
+            stacked, NamedSharding(mesh, P(db_axes)))
+        self._search = jax.jit(chamvs_lib.make_distributed_search(
+            mesh, cfg, db_axes=db_axes, query_axis=query_axis))
+        self._gather = jax.jit(
+            chamvs_lib.make_distributed_gather(mesh, db_axes))
+        self.payload_tokens = self._shard_table(payload_tokens, num_shards,
+                                                db_axes)
+        self.chunk_table = self._shard_table(chunk_table, num_shards,
+                                             db_axes)
+
+    def _shard_table(self, table, num_shards: int, db_axes):
+        """Place a payload table across the memory nodes (pad the trailing
+        rows so every node holds an equal slice; padded rows are never
+        addressed because ids < N)."""
+        if table is None:
+            return None
+        n = table.shape[0]
+        rem = (-n) % num_shards
+        if rem:
+            pad = [(0, rem)] + [(0, 0)] * (table.ndim - 1)
+            table = jnp.pad(table, pad)
+        return jax.device_put(
+            table, NamedSharding(self.mesh, P(db_axes)))
+
+    def search(self, queries: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        q = jnp.asarray(queries, jnp.float32)
+        if self.query_proj is not None:
+            q = q @ self.query_proj
+        with use_mesh(self.mesh):
+            return self._search(self.db_params, self.db_shard, q)
+
+    def resolve(self, ids: jnp.ndarray, kind: str = "tokens"
+                ) -> jnp.ndarray:
+        def gather(table, ids):
+            with use_mesh(self.mesh):
+                return self._gather(table, jnp.maximum(ids, 0))
+        return _resolve_from_tables(self.payload_tokens, self.chunk_table,
+                                    ids, kind, gather=gather)

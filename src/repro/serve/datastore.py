@@ -1,0 +1,144 @@
+"""``DatastoreBuilder`` — the one place an IVF-PQ datastore is built.
+
+The train-quantizers / build-shards / keep-payload-tables recipe used to
+be copy-pasted (with drifting hyperparameters) across
+``launch/serve.py``, ``examples/serve_ralm.py``,
+``examples/quickstart.py`` and the system-test fixture. It lives here
+now, in two flavors:
+
+  * ``build(vectors, ...)`` — index an explicit vector set (quickstart,
+    ANN benchmarks);
+  * ``from_corpus(params, cfg, corpus, ...)`` — the kNN-LM datastore:
+    run the LM over a token corpus and index *its own hidden states*,
+    each keyed to the next token (paper §2.1, Khandelwal et al.).
+
+The result is a ``Datastore`` that hands out ``Retriever``
+implementations for either deployment shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.chamvs import ChamVSConfig
+from repro.core.ivfpq import (IVFPQConfig, IVFPQParams, IVFPQShard,
+                              build_shards, train_ivfpq)
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.serve.api import DistributedRetriever, LocalRetriever
+
+
+@dataclasses.dataclass
+class Datastore:
+    """A built index + its payload tables."""
+    params: IVFPQParams
+    shards: List[IVFPQShard]
+    index_cfg: IVFPQConfig
+    payload_tokens: Optional[jnp.ndarray] = None   # [N] next-token table
+    chunk_table: Optional[jnp.ndarray] = None      # [N, chunk_len]
+    num_vectors: int = 0
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    def search_config(self, nprobe: int = 32, k: int = 100,
+                      backend: str = "ref", **kw) -> ChamVSConfig:
+        return ChamVSConfig(ivfpq=self.index_cfg, nprobe=nprobe, k=k,
+                            backend=backend, **kw)
+
+    def retriever(self, search_cfg: ChamVSConfig,
+                  query_proj: Optional[jnp.ndarray] = None
+                  ) -> LocalRetriever:
+        """Single-process ``Retriever`` over this datastore."""
+        return LocalRetriever(params=self.params, shards=self.shards,
+                              cfg=search_cfg,
+                              payload_tokens=self.payload_tokens,
+                              chunk_table=self.chunk_table,
+                              query_proj=query_proj)
+
+    def distributed_retriever(self, mesh: Mesh, search_cfg: ChamVSConfig,
+                              query_proj: Optional[jnp.ndarray] = None,
+                              db_axes: Tuple[str, ...] = ("data",)
+                              ) -> DistributedRetriever:
+        """``Retriever`` with the shards laid out over ``mesh`` (one
+        memory node per device along ``db_axes``)."""
+        return DistributedRetriever(
+            mesh, self.params, self.shards, search_cfg,
+            payload_tokens=self.payload_tokens,
+            chunk_table=self.chunk_table, query_proj=query_proj,
+            db_axes=db_axes)
+
+
+@dataclasses.dataclass
+class DatastoreBuilder:
+    """Hyperparameters of the build, with the defaults the old call
+    sites converged on. ``m=None`` derives the PQ sub-quantizer count
+    from the dimension (``dim // 16``, floor 4)."""
+    dim: int
+    nlist: int = 8
+    m: Optional[int] = None
+    list_cap: int = 1024
+    residual: bool = False
+    num_shards: int = 2
+    kmeans_iters: int = 8
+    seed: int = 1
+
+    def index_config(self) -> IVFPQConfig:
+        m = self.m if self.m is not None else max(self.dim // 16, 4)
+        return IVFPQConfig(dim=self.dim, nlist=self.nlist, m=m,
+                           list_cap=self.list_cap, residual=self.residual)
+
+    def build(self, vectors: np.ndarray,
+              payload_tokens: Optional[jnp.ndarray] = None,
+              chunk_table: Optional[jnp.ndarray] = None,
+              train_vectors: Optional[np.ndarray] = None) -> Datastore:
+        """Train quantizers (on ``train_vectors`` if given, else on the
+        full set) and shard the database over ``num_shards`` memory
+        nodes (partition scheme 1: every IVF list striped across all
+        shards)."""
+        vectors = np.asarray(vectors, np.float32)
+        train = vectors if train_vectors is None else np.asarray(
+            train_vectors, np.float32)
+        icfg = self.index_config()
+        params = train_ivfpq(jax.random.PRNGKey(self.seed),
+                             jnp.asarray(train), icfg,
+                             kmeans_iters=self.kmeans_iters)
+        shards = build_shards(params, vectors, icfg,
+                              num_shards=self.num_shards)
+        return Datastore(
+            params=params, shards=shards, index_cfg=icfg,
+            payload_tokens=None if payload_tokens is None
+            else jnp.asarray(payload_tokens),
+            chunk_table=None if chunk_table is None
+            else jnp.asarray(chunk_table),
+            num_vectors=vectors.shape[0])
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def corpus_keys(params, cfg: ModelConfig, corpus: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """kNN-LM keys: the LM's hidden state at every prefix of
+        ``corpus`` [n_docs, doc_len], paired with the next token.
+        Returns (keys [N, d_model], next_tokens [N])."""
+        corpus = np.asarray(corpus, np.int32)
+        _, _, hidden = tf.forward(params, cfg, tokens=jnp.asarray(corpus),
+                                  mode="train", return_hidden=True)
+        keys = np.asarray(hidden[:, :-1].astype(jnp.float32)).reshape(
+            -1, cfg.d_model)
+        nxt = corpus[:, 1:].reshape(-1)
+        return keys, nxt
+
+    def from_corpus(self, params, cfg: ModelConfig, corpus: np.ndarray
+                    ) -> Datastore:
+        """Build the kNN-LM datastore from the model's own hidden states
+        over ``corpus`` (the flow every serving entry point used to
+        hand-roll)."""
+        assert self.dim == cfg.d_model, (self.dim, cfg.d_model)
+        keys, nxt = self.corpus_keys(params, cfg, corpus)
+        return self.build(keys, payload_tokens=jnp.asarray(nxt))

@@ -1,0 +1,386 @@
+"""``RalmEngine`` — the single generation loop behind every entry point.
+
+The decode -> retrieve -> interpolate -> sample step used to live in two
+divergent copies (``core/generate.py`` and ``core/coordinator.py``; they
+even disagreed on the step-0 retrieval query). It now lives here once,
+split into the two phases the scheduler pipelines:
+
+  * ``dispatch_decode(seq)`` — advance the LM one token (async dispatch);
+  * ``finish_step(seq, ...)`` — retrieval + kNN-LM interpolation / RETRO
+    re-encode + sampling.
+
+Backends own the decode side of the boundary:
+
+  * ``MonolithicBackend`` — one mesh / the default devices; decode and
+    search share hardware (the paper's GPU-only baseline);
+  * ``DisaggregatedBackend`` — the paper's split: an LM pool and a
+    retrieval pool with independent meshes, plus ``PoolTimes`` measuring
+    the per-pool step times that give the Fig. 13 optimal-ratio estimate.
+
+Retrieval is any object satisfying ``api.Retriever``; the engine never
+looks past ``search``/``resolve``.
+
+Step-0 correctness note: the first retrieval query is the *prefill*'s
+last-position hidden state (exactly what the decode step would have
+produced), so monolithic and disaggregated runs are token-identical
+under greedy decoding — the old loops disagreed here (embedding
+stand-in vs re-decoding the last prompt token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import use_mesh
+from repro.core import rag as rag_lib
+from repro.core.chamvs import ChamVSConfig
+from repro.core.ivfpq import IVFPQParams, IVFPQShard
+from repro.core.rag import RagConfig
+from repro.launch.mesh import make_mesh_for
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.serve.api import (DistributedRetriever, EngineConfig,
+                             RalmRequest, RalmResponse, Retriever)
+from repro.serve.scheduler import RalmScheduler
+
+
+@dataclasses.dataclass
+class PoolTimes:
+    """Per-pool step times (paper Fig. 13 instrumentation)."""
+    decode_s: List[float] = dataclasses.field(default_factory=list)
+    search_s: List[float] = dataclasses.field(default_factory=list)
+
+    def optimal_ratio(self) -> float:
+        """Paper Fig. 13: LM-pool units needed to saturate one retrieval
+        engine = (retrieval throughput) / (decode throughput) per batch."""
+        if not self.decode_s or not self.search_s:
+            return float("nan")
+        return float(np.median(self.decode_s) / np.median(self.search_s))
+
+
+# ---------------------------------------------------------------------------
+# decode backends
+# ---------------------------------------------------------------------------
+
+def _prefill(params, cfg: ModelConfig, rag: RagConfig,
+             prompt: jnp.ndarray, max_seq: int):
+    """Consume the prompt. Returns (caches, enc_states, last_logits [B,V],
+    last_hidden [B,d]) — the hidden state at the last prompt position is
+    the step-0 retrieval query."""
+    B, T0 = prompt.shape
+    caches = tf.init_cache(cfg, B, max_seq=max_seq, enc_len=0)
+    enc_states = None
+    if cfg.arch == "encdec":
+        enc_len = rag.k * rag.chunk_len if rag.mode == "retro" else 0
+        neutral = jnp.zeros((B, max(enc_len, 8)), jnp.int32)
+        enc_states = tf.encode(params, cfg, tf.embed_tokens(params, neutral))
+    pos = jnp.broadcast_to(jnp.arange(T0)[None], (B, T0))
+    if cfg.rope_mode == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, T0))
+    logits, caches, hidden = tf.forward(
+        params, cfg, tokens=prompt, positions=pos, mode="prefill",
+        caches=caches, enc_states=enc_states, return_hidden=True)
+    last_logits = logits if logits.ndim == 2 else logits[:, -1]
+    last_hidden = hidden if hidden.ndim == 2 else hidden[:, -1]
+    return caches, enc_states, last_logits, last_hidden
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _jit_decode(params, cfg: ModelConfig, caches, token, position,
+                enc_states):
+    """One shared jit cache for all backends/engines (``cfg`` is frozen
+    and hashable), so repeatedly constructing engines — e.g. the
+    ``generate()`` compat shim — never re-traces decode_step."""
+    return tf.decode_step(params, cfg, caches, token, position,
+                          enc_states=enc_states, return_hidden=True)
+
+
+class MonolithicBackend:
+    """Decode on the default device set — LM and retrieval share
+    hardware. No per-step blocking, so jax's async dispatch pipelines."""
+
+    name = "monolithic"
+    times: Optional[PoolTimes] = None
+
+    def __init__(self, params, cfg: ModelConfig):
+        self.params, self.cfg = params, cfg
+
+    def prefill(self, rag: RagConfig, prompt: jnp.ndarray, max_seq: int):
+        return _prefill(self.params, self.cfg, rag, prompt, max_seq)
+
+    def decode(self, caches, token, position, enc_states=None):
+        return _jit_decode(self.params, self.cfg, caches, token, position,
+                           enc_states)
+
+    def encode_chunks(self, chunks: jnp.ndarray) -> jnp.ndarray:
+        """RETRO re-encode of retrieved chunk tokens [B, L] — LM-side
+        work, so it lives on the backend like prefill/decode."""
+        emb = tf.embed_tokens(self.params, chunks)
+        return tf.encode(self.params, self.cfg, emb)
+
+
+class DisaggregatedBackend:
+    """The paper's split device set: an LM pool and a retrieval pool with
+    independent meshes. The retrieval mesh is exposed for a
+    ``DistributedRetriever`` to live on; ``PoolTimes`` records both
+    pools' step times (decode here, search in the engine)."""
+
+    name = "disaggregated"
+
+    def __init__(self, params, cfg: ModelConfig,
+                 lm_devices: int = 1, ret_devices: int = 1,
+                 measure: bool = True):
+        """``measure=True`` records PoolTimes (Fig. 13 ratio) — at the
+        cost of a block_until_ready per pool step, which serializes the
+        pools. Pass ``measure=False`` to let the scheduler's two-phase
+        dispatch actually overlap decode and retrieval across batches."""
+        devs = jax.devices()
+        assert lm_devices + ret_devices <= len(devs), (
+            lm_devices, ret_devices, len(devs))
+        self.params, self.cfg = params, cfg
+        self.times = PoolTimes() if measure else None
+        # LM pool: pure data-parallel decode (each unit = one "GPU process")
+        self.lm_mesh = make_mesh_for(devs[:lm_devices], data=lm_devices)
+        # Retrieval pool: ChamVS memory nodes over their own mesh
+        self.ret_mesh = make_mesh_for(
+            devs[lm_devices:lm_devices + ret_devices], data=ret_devices)
+
+    def prefill(self, rag: RagConfig, prompt: jnp.ndarray, max_seq: int):
+        with use_mesh(self.lm_mesh):
+            return _prefill(self.params, self.cfg, rag, prompt, max_seq)
+
+    def decode(self, caches, token, position, enc_states=None):
+        t0 = time.time()
+        with use_mesh(self.lm_mesh):
+            logits, caches, hidden = _jit_decode(
+                self.params, self.cfg, caches, token, position, enc_states)
+        if self.times is not None:
+            logits.block_until_ready()
+            self.times.decode_s.append(time.time() - t0)
+        return logits, caches, hidden
+
+    def encode_chunks(self, chunks: jnp.ndarray) -> jnp.ndarray:
+        """RETRO re-encode on the LM pool (encoder work belongs to the
+        LM side of the pool split, like prefill's encoder pass)."""
+        with use_mesh(self.lm_mesh):
+            emb = tf.embed_tokens(self.params, chunks)
+            return tf.encode(self.params, self.cfg, emb)
+
+
+# ---------------------------------------------------------------------------
+# per-request state + the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SequenceState:
+    """One active request's decode state (owned by the scheduler)."""
+    request: RalmRequest
+    caches: Any
+    enc_states: Optional[jnp.ndarray]
+    out: List[jnp.ndarray]
+    cur: jnp.ndarray                     # [B, 1] last sampled token
+    t0: int                              # prompt length
+    logits0: Optional[jnp.ndarray]       # prefill logits (consumed at s=0)
+    hidden0: Optional[jnp.ndarray]       # prefill hidden  (step-0 query)
+    rng: Optional[jax.Array]
+    step: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.request.steps
+
+    def tokens(self) -> jnp.ndarray:
+        return jnp.concatenate(self.out, axis=1)
+
+
+class RalmEngine:
+    """Facade: one decode backend + one ``Retriever`` + the canonical
+    generation step. All entry points (examples, launchers, the old
+    ``generate``/``DisaggregatedRuntime`` shims) go through here."""
+
+    def __init__(self, backend, retriever: Optional[Retriever] = None,
+                 rag: Optional[RagConfig] = None,
+                 max_seq: Optional[int] = None,
+                 max_active: Optional[int] = None):
+        self.backend = backend
+        self.retriever = retriever
+        self.rag = rag if rag is not None else RagConfig(mode="none")
+        self.cfg = backend.cfg
+        self.max_seq = max_seq
+        self.times: Optional[PoolTimes] = getattr(backend, "times", None)
+        self.scheduler = RalmScheduler(self, max_active=max_active)
+        self._unclaimed: List[RalmResponse] = []
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def monolithic(cls, params, cfg: ModelConfig, rag: RagConfig,
+                   retriever: Optional[Retriever] = None,
+                   max_seq: Optional[int] = None) -> "RalmEngine":
+        return cls(MonolithicBackend(params, cfg), retriever, rag,
+                   max_seq=max_seq)
+
+    @classmethod
+    def disaggregated(cls, params, cfg: ModelConfig, rag: RagConfig,
+                      db_params: IVFPQParams, db_shards: List[IVFPQShard],
+                      search_cfg: ChamVSConfig,
+                      payload_tokens: Optional[jnp.ndarray] = None,
+                      chunk_table: Optional[jnp.ndarray] = None,
+                      lm_devices: int = 1, ret_devices: int = 1,
+                      query_proj: Optional[jnp.ndarray] = None,
+                      max_seq: Optional[int] = None,
+                      measure: bool = True) -> "RalmEngine":
+        backend = DisaggregatedBackend(params, cfg, lm_devices=lm_devices,
+                                       ret_devices=ret_devices,
+                                       measure=measure)
+        retriever = DistributedRetriever(
+            backend.ret_mesh, db_params, db_shards, search_cfg,
+            payload_tokens=payload_tokens, chunk_table=chunk_table,
+            query_proj=query_proj)
+        return cls(backend, retriever, rag, max_seq=max_seq)
+
+    @classmethod
+    def from_config(cls, config: EngineConfig, params, datastore,
+                    search_cfg: ChamVSConfig,
+                    query_proj: Optional[jnp.ndarray] = None
+                    ) -> "RalmEngine":
+        """Stand an engine up from an ``EngineConfig`` + a built
+        ``Datastore`` (see ``repro.serve.datastore``). Falls back to a
+        monolithic engine (with a warning) when ``disaggregate`` is
+        requested on a single-device host."""
+        if config.disaggregate and len(jax.devices()) < 2:
+            import warnings
+            warnings.warn(
+                "EngineConfig.disaggregate=True needs >= 2 devices; "
+                f"found {len(jax.devices())} — falling back to a "
+                "monolithic engine (no PoolTimes).", RuntimeWarning,
+                stacklevel=2)
+        if config.disaggregate and len(jax.devices()) >= 2:
+            eng = cls.disaggregated(
+                params, config.model, config.rag, datastore.params,
+                datastore.shards, search_cfg,
+                payload_tokens=datastore.payload_tokens,
+                chunk_table=datastore.chunk_table,
+                lm_devices=config.lm_devices,
+                ret_devices=config.ret_devices, query_proj=query_proj,
+                max_seq=config.max_seq)
+        else:
+            eng = cls.monolithic(
+                params, config.model, config.rag,
+                retriever=datastore.retriever(search_cfg,
+                                              query_proj=query_proj),
+                max_seq=config.max_seq)
+        eng.scheduler.max_active = config.max_active
+        return eng
+
+    # -- the canonical step (called by the scheduler) -----------------------
+
+    def start(self, request: RalmRequest) -> SequenceState:
+        """Prefill a request into an active sequence."""
+        B, T0 = request.prompt.shape
+        max_seq = self.max_seq or (T0 + request.steps)
+        caches, enc_states, logits0, hidden0 = self.backend.prefill(
+            self.rag, request.prompt, max_seq)
+        return SequenceState(
+            request=request, caches=caches, enc_states=enc_states,
+            out=[request.prompt], cur=request.prompt[:, -1:], t0=T0,
+            logits0=logits0, hidden0=hidden0, rng=request.rng)
+
+    def dispatch_decode(self, seq: SequenceState
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Phase 1: one LM step. At step 0 the prefill already produced
+        both the logits and the retrieval query, so nothing runs."""
+        if seq.step == 0:
+            logits, hidden = seq.logits0, seq.hidden0
+            seq.logits0 = seq.hidden0 = None
+            return logits, hidden
+        B = seq.cur.shape[0]
+        position = jnp.full((B,), seq.t0 + seq.step - 1, jnp.int32)
+        logits, seq.caches, hidden = self.backend.decode(
+            seq.caches, seq.cur, position, enc_states=seq.enc_states)
+        return logits, hidden
+
+    def _search(self, queries: jnp.ndarray):
+        t0 = time.time()
+        dists, ids = self.retriever.search(queries)
+        if self.times is not None:
+            dists.block_until_ready()
+            self.times.search_s.append(time.time() - t0)
+        return dists, ids
+
+    def finish_step(self, seq: SequenceState, logits: jnp.ndarray,
+                    hidden: jnp.ndarray) -> None:
+        """Phase 2: retrieve (if due) + integrate + sample one token."""
+        s, rag = seq.step, self.rag
+        log_or_prob = logits
+        if self.retriever is not None and rag.mode != "none" and \
+                bool(rag_lib.should_retrieve(jnp.asarray(s), rag.interval)):
+            dists, ids = self._search(hidden)
+            if seq.request.trace is not None:
+                seq.request.trace.append(dict(step=s, ids=np.asarray(ids)))
+            if rag.mode == "knnlm":
+                toks = self.retriever.resolve(ids, kind="tokens")
+                log_or_prob = rag_lib.knnlm_interpolate(
+                    logits, dists, toks, rag.lam, rag.temperature)
+            elif rag.mode == "retro" and self.cfg.arch == "encdec":
+                B = seq.cur.shape[0]
+                chunks = self.retriever.resolve(ids, kind="chunks")
+                seq.enc_states = self.backend.encode_chunks(
+                    chunks.reshape(B, -1))
+        if seq.request.greedy or seq.rng is None:
+            nxt = jnp.argmax(log_or_prob, axis=-1).astype(jnp.int32)
+        else:
+            seq.rng, k = jax.random.split(seq.rng)
+            nxt = jax.random.categorical(k, log_or_prob).astype(jnp.int32)
+        seq.cur = nxt[:, None]
+        seq.out.append(seq.cur)
+        seq.step += 1
+
+    # -- serving API --------------------------------------------------------
+
+    def submit(self, request: RalmRequest) -> int:
+        return self.scheduler.submit(request)
+
+    def step(self) -> List[RalmResponse]:
+        return self.scheduler.step()
+
+    def run(self) -> List[RalmResponse]:
+        """Drain the scheduler; includes any responses that completed
+        during an interleaved ``generate()`` call."""
+        out = self._unclaimed + self.scheduler.run()
+        self._unclaimed = []
+        return out
+
+    def generate(self, prompt: jnp.ndarray, steps: int, *,
+                 greedy: bool = True, rng: Optional[jax.Array] = None,
+                 trace: Optional[list] = None) -> jnp.ndarray:
+        """Synchronous convenience: one request, run to completion.
+        Other in-flight requests also advance; their responses are held
+        for the next ``run()`` call, not discarded."""
+        rid = self.submit(RalmRequest(prompt=jnp.asarray(prompt),
+                                      steps=steps, greedy=greedy, rng=rng,
+                                      trace=trace))
+        result = None
+        for resp in self.scheduler.run():
+            if resp.request_id == rid:
+                result = resp
+            else:
+                self._unclaimed.append(resp)
+        if result is None:  # pragma: no cover
+            raise RuntimeError("request did not complete")
+        return jnp.asarray(result.tokens)
+
+    def generate_batches(self, prompts: List[jnp.ndarray], steps: int
+                         ) -> List[np.ndarray]:
+        """Pipelined convenience: several request batches in flight at
+        once (the old ``generate_pipelined``). Results in submit order."""
+        rids = [self.submit(RalmRequest(prompt=jnp.asarray(p), steps=steps))
+                for p in prompts]
+        by_id = {r.request_id: r.tokens for r in self.run()}
+        return [np.asarray(by_id[rid]) for rid in rids]

@@ -1,0 +1,112 @@
+"""Request-queue scheduler with continuous batching.
+
+Subsumes the old ``DisaggregatedRuntime.generate_pipelined`` round-robin:
+``submit()`` enqueues a request at any time (including between steps —
+new work joins the next ``step()``), ``step()`` advances every active
+sequence one token in two phases:
+
+  phase 1 — dispatch the LM decode for *every* active sequence. jax
+     dispatch is async, so on a disaggregated deployment sequence A's
+     retrieval (phase 2) overlaps sequence B's decode on the other pool
+     — the paper's multi-process ChamLM overlap (Fig. 12 throughput).
+     (PoolTimes instrumentation blocks per pool step for measurement;
+     build the backend with ``measure=False`` for maximum overlap.)
+  phase 2 — retrieval + integration + sampling per sequence, in the
+     order the decodes were dispatched.
+
+Sequences finish independently (continuous batching): a request that was
+submitted later, or that asks for fewer steps, completes without waiting
+for the rest of the batch.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import TYPE_CHECKING, List, Optional
+
+import numpy as np
+
+from repro.serve.api import RalmRequest, RalmResponse
+
+if TYPE_CHECKING:  # avoid a circular import; the engine owns its scheduler
+    from repro.serve.engine import RalmEngine
+
+
+class RalmScheduler:
+    """FIFO admission + lockstep two-phase stepping over active
+    sequences. ``max_active`` bounds sequences in flight (admission
+    control); ``None`` admits everything immediately."""
+
+    def __init__(self, engine: "RalmEngine",
+                 max_active: Optional[int] = None):
+        self.engine = engine
+        self.max_active = max_active
+        self.queue: deque = deque()
+        self.active: list = []
+        self._next_id = 0
+        self._issued: set = set()
+
+    # ------------------------------------------------------------------
+    def submit(self, request: RalmRequest) -> int:
+        """Enqueue a request; returns its id. Prefill happens at
+        admission (inside ``step``), not here."""
+        if request.request_id is None:
+            request.request_id = self._next_id
+        elif request.request_id in self._issued:
+            raise ValueError(
+                f"request_id {request.request_id} already issued")
+        self._issued.add(request.request_id)
+        self._next_id = max(self._next_id, request.request_id) + 1
+        self.queue.append(request)
+        return request.request_id
+
+    def _admit(self) -> None:
+        while self.queue and (self.max_active is None or
+                              len(self.active) < self.max_active):
+            self.active.append(self.engine.start(self.queue.popleft()))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[RalmResponse]:
+        """Advance every active sequence one token; returns the requests
+        that completed on this step."""
+        self._admit()
+        finished: List[RalmResponse] = []
+        # a steps<=0 request is complete at admission: prompt only
+        already_done = [s for s in self.active if s.done]
+        self.active = [s for s in self.active if not s.done]
+        for seq in already_done:
+            finished.append(RalmResponse(
+                request_id=seq.request.request_id,
+                tokens=np.asarray(seq.tokens()),
+                steps=seq.step, trace=seq.request.trace))
+        # phase 1: dispatch decode for every sequence (async)
+        pending = [(seq, *self.engine.dispatch_decode(seq))
+                   for seq in self.active]
+        # phase 2: retrieval + integrate + sample (overlaps phase-1 work
+        # still in flight on the other pool)
+        still_active = []
+        for seq, logits, hidden in pending:
+            self.engine.finish_step(seq, logits, hidden)
+            if seq.done:
+                finished.append(RalmResponse(
+                    request_id=seq.request.request_id,
+                    tokens=np.asarray(seq.tokens()),
+                    steps=seq.step, trace=seq.request.trace))
+            else:
+                still_active.append(seq)
+        self.active = still_active
+        return finished
+
+    def run(self) -> List[RalmResponse]:
+        """Drain the queue: step until nothing is queued or active."""
+        out: List[RalmResponse] = []
+        while self.has_work:
+            out.extend(self.step())
+        return out

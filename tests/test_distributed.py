@@ -26,6 +26,7 @@ def test_distributed_search_matches_single():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
 from repro.core.ivfpq import *
 from repro.core.chamvs import *
 key = jax.random.PRNGKey(0)
@@ -36,11 +37,10 @@ shards = build_shards(params, np.asarray(vecs), cfg_i, num_shards=4)
 cfg = ChamVSConfig(ivfpq=cfg_i, nprobe=16, k=20, backend="ref")
 q = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
 d0, i0 = search_single(params, shards, q, cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 stacked = jax.device_put(stack_shards(shards), NamedSharding(mesh, P("data")))
 search = make_distributed_search(mesh, cfg, db_axes=("data",), query_axis="model")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     d1, i1 = jax.jit(search)(params, stacked, q)
 assert np.allclose(d0, d1, rtol=1e-5), "dists diverge"
 assert (np.asarray(i0) == np.asarray(i1)).all(), "ids diverge"
@@ -54,6 +54,7 @@ def test_probe_split_search():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
 from repro.core.ivfpq import *
 from repro.core.chamvs import *
 key = jax.random.PRNGKey(0)
@@ -64,12 +65,11 @@ shards = build_shards(params, np.asarray(vecs), cfg_i, num_shards=2)
 cfg = ChamVSConfig(ivfpq=cfg_i, nprobe=8, k=10, backend="ref")
 q = jax.random.normal(jax.random.PRNGKey(1), (1, 32))
 d0, i0 = search_single(params, shards, q, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 stacked = jax.device_put(stack_shards(shards), NamedSharding(mesh, P("data")))
 search = make_distributed_search(mesh, cfg, db_axes=("data",),
                                  query_axis="model", nq=1)  # 1 % 4 -> probe split
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     d1, i1 = jax.jit(search)(params, stacked, q)
 assert np.allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5)
 assert (np.asarray(i0) == np.asarray(i1)).all()
@@ -82,14 +82,14 @@ def test_distributed_gather():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
 from repro.core.chamvs import make_distributed_gather
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 table = jnp.arange(800, dtype=jnp.int32) * 3
 tsh = jax.device_put(table, NamedSharding(mesh, P(("data", "model"))))
 ids = jnp.array([[0, 799, 400], [123, 7, 650]], jnp.int32)
 g = make_distributed_gather(mesh, ("data", "model"))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     got = jax.jit(g)(tsh, ids)
 assert (np.asarray(got) == np.asarray(table)[np.asarray(ids)]).all()
 print("DGATHER_OK")
@@ -102,10 +102,9 @@ def test_compressed_psum_and_dp_training():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import make_mesh, shard_map, use_mesh
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
 def body(xs):
     g = {"w": xs[0]}
@@ -114,7 +113,7 @@ def body(xs):
     return exact, comp
 f = shard_map(body, mesh=mesh, in_specs=(P("data"),), out_specs=(P(), P()),
               check_vma=False)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     exact, comp = jax.jit(f)(x)
 err = float(jnp.abs(exact - comp).max() / jnp.abs(exact).max())
 assert err < 0.05, err
@@ -128,6 +127,7 @@ def test_elastic_resume_across_mesh_sizes():
     mesh — loss continues from the same value (elastic rescale)."""
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np, tempfile, pathlib
+from repro.compat import use_mesh
 from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models import transformer as tf
@@ -150,7 +150,7 @@ def step_fn(params, opt, batch):
 
 tmp = tempfile.mkdtemp()
 mesh4 = make_mesh_for(jax.devices()[:4], data=4)
-with jax.set_mesh(mesh4):
+with use_mesh(mesh4):
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     opt = adamw.init_opt_state(params, ocfg)
     js = jax.jit(step_fn)
@@ -172,7 +172,7 @@ like = jax.eval_shape(lambda: (tf.init_params(jax.random.PRNGKey(0), cfg),
     tmp, like, mesh2, (specs, adamw.OptState(
         step=jax.sharding.PartitionSpec(), m=specs, v=specs)))
 params2, opt2 = restored
-with jax.set_mesh(mesh2):
+with use_mesh(mesh2):
     batch = jax.tree.map(jnp.asarray, data.host_batch(3))
     _, _, loss4_el = jax.jit(step_fn)(params2, opt2, batch)
 # different device counts reduce in different orders -> small bf16

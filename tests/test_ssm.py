@@ -58,13 +58,17 @@ def test_rwkv6_channel_mix_shift():
 
 
 def test_rwkv6_decay_bounded():
-    """Data-dependent decay w_t must lie in (0, 1) — stability invariant."""
+    """Data-dependent decay w_t must lie in (0, 1) — stability invariant.
+
+    Mirrors the implementation's decay clamp (ssm.py: exp(w_log) clipped
+    to 8, i.e. w >= e^-8) — without it the raw exp underflows to 0 in
+    f32 for extreme inputs, which is exactly what the clamp prevents."""
     B, T, d, H, dh, f = 1, 8, 16, 2, 8, 32
     p = make_rwkv_params(jax.random.PRNGKey(4), d, H, dh, f)
     x = 10.0 * jax.random.normal(jax.random.PRNGKey(5), (B, T, d))
     w_log = p.w0[None, None] + jnp.tanh(
         (x + 0) @ p.w_lora_a) @ p.w_lora_b
-    w = jnp.exp(-jnp.exp(w_log))
+    w = jnp.exp(-jnp.clip(jnp.exp(w_log.astype(jnp.float32)), 0.0, 8.0))
     assert float(w.min()) > 0.0 and float(w.max()) < 1.0
 
 
