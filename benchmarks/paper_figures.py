@@ -2,7 +2,6 @@
 benchmarks/run.py prints them as CSV (name,us_per_call,derived)."""
 from __future__ import annotations
 
-import json
 import pathlib
 import time
 from typing import Dict, List
@@ -71,7 +70,8 @@ def fig9_search_latency() -> List[Dict]:
                          f"chamvs_ms={t_chv*1e3:.2f};"
                          f"speedup={t_cpu/t_chv:.1f}x")))
     # measured grounding: small-scale ref ADC scan wall time on this host
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.kernels.pq_adc.ops import pq_adc_topk
     B, n, m = 8, 4096, 16
     luts = jax.random.normal(jax.random.PRNGKey(0), (B, m, 256))

@@ -1,0 +1,100 @@
+"""Retrieval QPS/latency sweep against the ``RetrievalService``
+(paper Fig. 9/10 axes: batch size x nprobe, with the queue-wait /
+scan / merge breakdown from ``repro.retrieval.stats``).
+
+Run via ``python -m benchmarks.run --mode retrieval``; emits
+``BENCH_retrieval.json`` with one row per (batch, nprobe) point.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _build(dim: int, n_vecs: int, nlist: int, num_shards: int):
+    from repro.core.ivfpq import IVFPQConfig, build_shards, train_ivfpq
+    icfg = IVFPQConfig(dim=dim, nlist=nlist, m=max(dim // 8, 4),
+                       list_cap=max(2 * n_vecs // (nlist * num_shards), 64))
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (n_vecs, dim))
+    params = train_ivfpq(key, vecs[:min(n_vecs, 4096)], icfg,
+                         kmeans_iters=6)
+    shards = build_shards(params, np.asarray(vecs), icfg,
+                          num_shards=num_shards)
+    return icfg, params, shards
+
+
+def run_sweep(
+    batch_sizes: Sequence[int] = (1, 4, 16, 64),
+    nprobes: Sequence[int] = (4, 16),
+    dim: int = 64,
+    n_vecs: int = 8192,
+    nlist: int = 64,
+    num_shards: int = 4,
+    k: int = 10,
+    iters: int = 8,
+    backend: str = "ref",
+    merge_fanout: Optional[int] = None,
+) -> List[Dict[str, object]]:
+    """One row per (batch, nprobe): QPS + per-stage latency means.
+
+    Each point uses a fresh service (fresh stats); one warmup flush per
+    point excludes compile time from the measured window."""
+    from repro.core.chamvs import ChamVSConfig
+    from repro.retrieval.service import RetrievalService, ServiceConfig
+
+    icfg, params, shards = _build(dim, n_vecs, nlist, num_shards)
+    rng = np.random.default_rng(0)
+    rows: List[Dict[str, object]] = []
+    for nprobe in nprobes:
+        cfg = ChamVSConfig(ivfpq=icfg, nprobe=nprobe, k=k, backend=backend)
+        for batch in batch_sizes:
+            svc = RetrievalService.local(
+                params, shards, cfg,
+                ServiceConfig(max_batch=batch, measure=True,
+                              merge_fanout=merge_fanout))
+            queries = jnp.asarray(
+                rng.normal(size=(iters + 1, batch, dim)), jnp.float32)
+            svc.search(queries[0])              # warmup: compile both stages
+            svc.stats.reset()
+            t0 = time.perf_counter()
+            for it in range(1, iters + 1):
+                svc.search(queries[it])
+            wall = time.perf_counter() - t0
+            snap = svc.stats.snapshot()
+            rows.append(dict(
+                batch=batch, nprobe=nprobe, num_shards=num_shards,
+                backend=backend,
+                merge_fanout=merge_fanout,
+                qps=snap["num_queries"] / wall,
+                us_per_query=wall / snap["num_queries"] * 1e6,
+                queue_wait_us=snap["queue_wait"]["mean_us"],
+                scan_us=snap["scan"]["mean_us"],
+                merge_us=snap["merge"]["mean_us"],
+                num_batches=snap["num_batches"],
+                coalescing_factor=snap["coalescing_factor"],
+            ))
+    return rows
+
+
+def main(out_path: str = "BENCH_retrieval.json") -> None:
+    rows = run_sweep()
+    with open(out_path, "w") as f:
+        json.dump(dict(rows=rows), f, indent=2)
+    print("batch,nprobe,qps,queue_wait_us,scan_us,merge_us")
+    for r in rows:
+        print(f"{r['batch']},{r['nprobe']},{r['qps']:.1f},"
+              f"{r['queue_wait_us']:.1f},{r['scan_us']:.1f},"
+              f"{r['merge_us']:.1f}")
+    print(f"wrote {out_path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    main()

@@ -2,15 +2,32 @@
 
 Prints ``name,us_per_call,derived`` CSV. Modeled rows are tagged `modeled`
 inside `derived`; wall-clock rows on this host are tagged `measured`.
+
+``--mode retrieval`` instead sweeps batch size x nprobe against the
+``RetrievalService`` and writes ``BENCH_retrieval.json`` with the
+queue-wait / scan / merge breakdown (see benchmarks/retrieval_bench.py).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
     # allow running as `python -m benchmarks.run` from the repo root
     sys.path.insert(0, "src")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["figures", "retrieval"],
+                    default="figures")
+    ap.add_argument("--out", default="BENCH_retrieval.json",
+                    help="output path for --mode retrieval")
+    args = ap.parse_args()
+
+    if args.mode == "retrieval":
+        from benchmarks import retrieval_bench
+        retrieval_bench.main(args.out)
+        return
+
     from benchmarks import paper_figures as pf
     from benchmarks import roofline
 

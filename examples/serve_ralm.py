@@ -21,10 +21,14 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import transformer as tf
-from repro.serve import DatastoreBuilder, RagConfig, RalmEngine
+from repro.serve import (DatastoreBuilder, RagConfig, RalmEngine,
+                         ServiceConfig)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--disaggregate", action="store_true")
+ap.add_argument("--async-retrieval", action="store_true",
+                help="serve searches through a RetrievalService (wave "
+                     "coalescing + LRU result cache)")
 args = ap.parse_args()
 
 # tiny decoder RALM (paper Dec-S family, reduced)
@@ -55,6 +59,11 @@ print(f"datastore: {ds.num_vectors} vectors, {ds.num_shards} memory nodes, "
 rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999, temperature=1.0)
 
 if disaggregate:
+    if args.async_retrieval:
+        import warnings
+        warnings.warn("--async-retrieval is not wired into the "
+                      "disaggregated path; using the synchronous "
+                      "DistributedRetriever", RuntimeWarning)
     engine = RalmEngine.disaggregated(
         params, cfg, rag, ds.params, ds.shards, ccfg,
         payload_tokens=ds.payload_tokens, lm_devices=1,
@@ -62,6 +71,13 @@ if disaggregate:
     print(f"disaggregated pools: "
           f"LM={engine.backend.lm_mesh.devices.size} dev, "
           f"retrieval={engine.backend.ret_mesh.devices.size} dev")
+elif args.async_retrieval:
+    # searches coalesce per scheduler wave into one batched dispatch
+    engine = RalmEngine.monolithic(
+        params, cfg, rag,
+        retriever=ds.async_retriever(ccfg,
+                                     service_cfg=ServiceConfig(
+                                         cache_entries=1024)))
 else:
     engine = RalmEngine.monolithic(params, cfg, rag,
                                    retriever=ds.retriever(ccfg))
@@ -76,3 +92,11 @@ print(f"retrieval-augmented continuation accuracy: {acc:.2f} "
       f"(untrained LM alone would be ~{1/64:.3f})")
 print("generated :", out[0, 8:16].tolist())
 print("ground tru:", corpus[0, 8:16].tolist())
+
+service = getattr(engine.retriever, "service", None)
+if service is not None:   # async path only (--disaggregate has no service)
+    st = service.stats
+    print(f"retrieval service: {st.batched_rows} query rows coalesced "
+          f"into {st.num_batches} kernel dispatches "
+          f"({st.coalescing_factor():.1f} rows/dispatch, "
+          f"{st.cache_hits} cache hits)")

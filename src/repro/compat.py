@@ -9,7 +9,7 @@ so the difference lives in exactly one place.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core.rag import RagConfig
 from repro.models.config import ModelConfig

@@ -1,39 +1,35 @@
-"""ChamVS — the distributed, accelerated vector search engine (paper §3–§4).
+"""ChamVS kernel frontend (paper §4): config + the per-shard scan.
 
-Maps the paper's disaggregated architecture onto a JAX device mesh:
+This module is the *kernel* side of the search engine — one memory
+node's LUT construction -> list streaming -> ADC -> truncated top-k',
+with pluggable backends:
 
-  * **Memory nodes** (paper: FPGA + DRAM) = shards of the PQ database laid out
-    over the ``db_axes`` mesh axes (default ``("pod", "data")``). Every IVF
-    list is striped evenly across all shards (partition scheme 1, §4.3), so
-    any nprobe selection produces balanced scan work.
-  * **Index scanner** (paper: GPU ChamVS.idx) = replicated centroid scan +
-    top-nprobe, executed where the queries live.
-  * **Query broadcast / result aggregation** (paper: CPU coordinator, steps
-    3–9) = ``all_gather`` of the query batch onto every shard, local
-    ADC + truncated top-k' per shard, ``all_gather`` of the k' survivors,
-    exact top-K merge — all in-graph over ICI instead of TCP/IP.
+  ``backend="ref"``    — pure-jnp gather ADC (paper's CPU flavor; also what
+                          the multi-pod dry-run lowers, since Pallas does
+                          not compile on the CPU backend).
+  ``backend="pallas"`` — the near-memory Pallas kernels (interpret=True on
+                          CPU).
 
-Work parallelism: on top of DB sharding, the query batch is split over the
-``query_axis`` (default ``"model"``) so the LUT construction + ADC scan for
-different queries run on different TP columns of the same DB shard row.
+Everything *above* the kernel now lives in ``repro.retrieval``:
 
-The ADC + K-selection backends are pluggable:
-  ``backend="ref"``    — pure-jnp gather ADC (paper's CPU flavor; also what the
-                          multi-pod dry-run lowers, since Pallas does not
-                          compile on the CPU backend).
-  ``backend="pallas"`` — the near-memory Pallas kernels (interpret=True on CPU).
+  * batching, futures, caching, stats  -> ``retrieval.service``
+    (``search_single`` below is a one-shot call into it — there is
+    exactly one search implementation);
+  * hierarchical K-selection merge     -> ``retrieval.merge``;
+  * mesh placement + broadcast/gather  -> ``retrieval.router``
+    (``make_distributed_search`` / ``make_distributed_gather`` remain
+    as deprecated wrappers).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
 from repro.core import ivfpq
 from repro.core.approx_topk_math import truncated_queue_len
 from repro.core.ivfpq import IVFPQConfig, IVFPQParams, IVFPQShard
@@ -112,21 +108,6 @@ def shard_search(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray,
     return out_d, out_i
 
 
-def search_single(params: IVFPQParams, shards: list[IVFPQShard],
-                  queries: jnp.ndarray, cfg: ChamVSConfig
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Single-process reference search over a list of shards (tests, builds)."""
-    _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
-    kk = cfg.k_prime(len(shards))
-    per = [shard_search(params, s, queries, probe_ids, cfg, kk) for s in shards]
-    return ivfpq.merge_topk(jnp.stack([p[0] for p in per]),
-                            jnp.stack([p[1] for p in per]), cfg.k)
-
-
-# ---------------------------------------------------------------------------
-# distributed search (shard_map over the production mesh)
-# ---------------------------------------------------------------------------
-
 def stack_shards(shards: list[IVFPQShard]) -> IVFPQShard:
     """[S] shards -> one IVFPQShard with a leading shard axis (to be placed
     with a sharded ``jax.device_put`` along the db axes)."""
@@ -137,6 +118,28 @@ def stack_shards(shards: list[IVFPQShard]) -> IVFPQShard:
     )
 
 
+def search_single(params: IVFPQParams, shards: list[IVFPQShard],
+                  queries: jnp.ndarray, cfg: ChamVSConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-process search over a list of shards (tests, builds).
+
+    Now a one-shot ``RetrievalService`` call, so the legacy path and the
+    serving path share one implementation (the service's jitted stages
+    are module-level, so repeated calls don't re-trace). ``measure`` and
+    ``bucket_pow2`` are off: a bare function call should not block the
+    dispatch stream for stage timings, and a one-shot batch gains
+    nothing from shape bucketing (it would only scan padded rows)."""
+    from repro.retrieval.service import RetrievalService, ServiceConfig
+    svc = RetrievalService.local(params, shards, cfg,
+                                 ServiceConfig(measure=False,
+                                               bucket_pow2=False))
+    return svc.search(queries)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers (moved to repro.retrieval.router)
+# ---------------------------------------------------------------------------
+
 def make_distributed_search(
     mesh: Mesh,
     cfg: ChamVSConfig,
@@ -144,113 +147,23 @@ def make_distributed_search(
     query_axis: Optional[str] = "model",
     nq: Optional[int] = None,
 ):
-    """Build the in-graph distributed search fn for ``mesh``.
-
-    Returns ``search(params, stacked_shard, queries) -> (dists, ids)`` with
-    replicated outputs [nq, K]. ``stacked_shard`` must carry a leading shard
-    axis of size prod(mesh[a] for a in db_axes).
-
-    Work split over ``query_axis`` (the TP columns of each DB shard row):
-      * query-split — each column searches nq/qsize queries (batch serving);
-      * probe-split — when nq is not divisible (e.g. long-context batch 1),
-        each column scans nprobe/qsize of every query's probed lists; the
-        merge then spans shards x columns (more, shorter L1 queues — the
-        paper's Fig. 8 regime).
-    """
-    db_axes = tuple(a for a in db_axes if a in mesh.axis_names)
-    num_shards = 1
-    for a in db_axes:
-        num_shards *= mesh.shape[a]
-    qa = query_axis if (query_axis and query_axis in mesh.axis_names) else None
-    qsize = mesh.shape[qa] if qa else 1
-    probe_split = bool(qa) and nq is not None and (
-        nq % qsize != 0 and cfg.nprobe % qsize == 0)
-    producers = num_shards * (qsize if probe_split else 1)
-    kk = cfg.k_prime(producers)
-
-    def body(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray):
-        # shard: leading axis length 1 on this device; queries: [nq_local, D]
-        local = jax.tree.map(lambda x: x[0], shard)
-        nq_local = queries.shape[0]
-        _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
-        if probe_split:
-            npl = cfg.nprobe // qsize
-            col = jax.lax.axis_index(qa)
-            probe_ids = jax.lax.dynamic_slice_in_dim(
-                probe_ids, col * npl, npl, axis=1)
-        d, i = shard_search(params, local, queries, probe_ids, cfg, kk)
-        # aggregate over memory nodes (paper step 7-8): gather the kk
-        # survivors of every producer, then exact-merge.
-        gather_axes = db_axes + ((qa,) if probe_split else ())
-        if gather_axes:
-            d = jax.lax.all_gather(d, gather_axes, axis=0, tiled=False)
-            i = jax.lax.all_gather(i, gather_axes, axis=0, tiled=False)
-            d = d.reshape(producers, nq_local, kk)
-            i = i.reshape(producers, nq_local, kk)
-            d = d.transpose(1, 0, 2).reshape(nq_local, producers * kk)
-            i = i.transpose(1, 0, 2).reshape(nq_local, producers * kk)
-        neg, pos = jax.lax.top_k(-d, min(cfg.k, d.shape[-1]))
-        out_d = -neg
-        out_i = jnp.take_along_axis(i, pos, axis=1)
-        # un-split the query batch (it was sharded over the TP axis)
-        if qa and not probe_split:
-            out_d = jax.lax.all_gather(out_d, qa, axis=0, tiled=True)
-            out_i = jax.lax.all_gather(out_i, qa, axis=0, tiled=True)
-        return out_d, out_i
-
-    shard_spec = IVFPQShard(
-        codes=P(db_axes if db_axes else None),
-        ids=P(db_axes if db_axes else None),
-        list_len=P(db_axes if db_axes else None),
-    )
-    q_spec = P(qa) if (qa and not probe_split) else P()
-    in_specs = (
-        IVFPQParams(P(), P()),    # quantizers replicated (paper: metadata)
-        shard_spec,
-        q_spec,
-    )
-    out_specs = (P(), P())
-
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_vma=False)
-
-    def search(params: IVFPQParams, stacked: IVFPQShard, queries: jnp.ndarray):
-        n = queries.shape[0]
-        if qa and not probe_split:
-            assert n % qsize == 0, (n, qsize)
-        return fn(params, stacked, queries)
-
-    return search
+    """Deprecated: use ``repro.retrieval.router.build_search`` (or a
+    ``ShardRouter``, which also owns placement)."""
+    warnings.warn(
+        "chamvs.make_distributed_search moved to "
+        "repro.retrieval.router.build_search", DeprecationWarning,
+        stacklevel=2)
+    from repro.retrieval.router import build_search
+    return build_search(mesh, cfg, db_axes=db_axes, query_axis=query_axis,
+                        nq=nq)
 
 
 def make_distributed_gather(mesh: Mesh, table_axes: Tuple[str, ...]):
-    """ID -> payload conversion against a fully sharded table (paper step 9).
-
-    ``table`` [N, ...] is sharded over ``table_axes``; ``ids`` [B, K] are
-    replicated. A naive ``table[ids]`` makes GSPMD all-gather the whole
-    table (measured 4 GB/step for the 1e9-entry token table —
-    EXPERIMENTS.md §Perf iteration 2); instead each shard gathers the ids
-    that fall in its range and a psum of the masked results (KB-scale)
-    assembles the answer."""
-    axes = tuple(a for a in table_axes if a in mesh.axis_names)
-    nsh = 1
-    for a in axes:
-        nsh *= mesh.shape[a]
-
-    def body(table, ids):
-        # flattened shard index over `axes` (row-major over the mesh dims)
-        idx = jnp.zeros((), jnp.int32)
-        for a in axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        nloc = table.shape[0]
-        lo = idx * nloc
-        rel = ids - lo
-        hit = (rel >= 0) & (rel < nloc)
-        vals = table[jnp.clip(rel, 0, nloc - 1)]
-        mask = hit.reshape(hit.shape + (1,) * (vals.ndim - hit.ndim))
-        vals = jnp.where(mask, vals, 0)
-        return jax.lax.psum(vals, axes)
-
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axes), P()), out_specs=P(), check_vma=False)
+    """Deprecated: use ``repro.retrieval.router.build_gather`` (or a
+    ``ShardRouter``)."""
+    warnings.warn(
+        "chamvs.make_distributed_gather moved to "
+        "repro.retrieval.router.build_gather", DeprecationWarning,
+        stacklevel=2)
+    from repro.retrieval.router import build_gather
+    return build_gather(mesh, table_axes)

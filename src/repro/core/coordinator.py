@@ -16,6 +16,7 @@ should build the engine directly (``RalmEngine.disaggregated`` or
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 import jax.numpy as jnp
@@ -43,6 +44,10 @@ class DisaggregatedRuntime:
                  payload_tokens: Optional[jnp.ndarray] = None,
                  lm_devices: int = 1, ret_devices: int = 1,
                  query_proj: Optional[jnp.ndarray] = None):
+        warnings.warn(
+            "repro.core.coordinator.DisaggregatedRuntime is deprecated; "
+            "use repro.serve.RalmEngine.disaggregated(...) or "
+            "RalmEngine.from_config(...)", DeprecationWarning, stacklevel=2)
         self.cfg, self.rag = cfg, rag
         self.engine = RalmEngine.disaggregated(
             params, cfg, rag, db_params, db_shards, chamvs_cfg,

@@ -16,6 +16,7 @@ New code should use ``repro.serve`` directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -29,6 +30,13 @@ from repro.serve.engine import RalmEngine
 
 class RetrievalEngine(LocalRetriever):
     """Deprecated name for ``repro.serve.LocalRetriever``."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.core.generate.RetrievalEngine is deprecated; use "
+            "repro.serve.LocalRetriever (same fields) or "
+            "Datastore.retriever(...)", DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
 
 
 def generate(
@@ -47,6 +55,10 @@ def generate(
 
     ``trace``: optional list collecting per-step dicts (retrieved ids
     etc.) for the benchmarks."""
+    warnings.warn(
+        "repro.core.generate.generate is deprecated; use "
+        "repro.serve.RalmEngine.monolithic(...).generate(...)",
+        DeprecationWarning, stacklevel=2)
     ralm = RalmEngine.monolithic(params, cfg, rag, retriever=engine,
                                  max_seq=max_seq)
     return ralm.generate(prompt, steps, greedy=greedy, rng=rng, trace=trace)

@@ -214,7 +214,6 @@ def adc_scan_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     This is exactly the paper's PQ decoding unit semantics: per byte, use the
     code as an address into the LUT column, then sum across the m sub-spaces.
     """
-    m = codes.shape[-1]
     gathered = jnp.take_along_axis(
         jnp.moveaxis(lut, -2, -1)[..., None, :, :],           # [..., 1, ksub, m]
         codes[..., None, :].astype(jnp.int32),                # [..., n, 1, m]
@@ -252,16 +251,11 @@ def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """K-way merge of per-shard candidates (paper step 8, CPU aggregation).
 
-    dists/ids: [num_shards, nq, kk] -> ([nq, k], [nq, k])."""
-    d = jnp.concatenate(jnp.unstack(dists, axis=0), axis=-1)
-    i = jnp.concatenate(jnp.unstack(ids, axis=0), axis=-1)
-    kk = min(k, d.shape[-1])
-    neg, pos = jax.lax.top_k(-d, kk)
-    out_d, out_i = -neg, jnp.take_along_axis(i, pos, axis=-1)
-    if kk < k:
-        out_d = jnp.pad(out_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
-        out_i = jnp.pad(out_i, ((0, 0), (0, k - kk)), constant_values=-1)
-    return out_d, out_i
+    dists/ids: [num_shards, nq, kk] -> ([nq, k], [nq, k]). The merge
+    itself is first-class in ``repro.retrieval.merge`` (which also has
+    the hierarchical tree variant); this delegates to the flat form."""
+    from repro.retrieval.merge import flat_merge
+    return flat_merge(dists, ids, k)
 
 
 def exact_search(vecs: jnp.ndarray, queries: jnp.ndarray, k: int

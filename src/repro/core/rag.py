@@ -19,8 +19,6 @@ table for RETRO); the disaggregated coordinator does the same gather on host.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -20,7 +20,7 @@ import dataclasses
 import pathlib
 import threading
 import queue as queue_mod
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -9,7 +9,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.compat import use_mesh
 from repro.configs import SHAPES, get_arch, list_archs

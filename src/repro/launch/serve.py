@@ -42,6 +42,15 @@ def main() -> None:
                     help="concurrent request batches (pipelined)")
     ap.add_argument("--disaggregate", action="store_true",
                     help="split devices into LM + retrieval pools")
+    ap.add_argument("--async-retrieval", action="store_true",
+                    help="route searches through a RetrievalService "
+                         "(wave coalescing + result cache)")
+    ap.add_argument("--retrieval-cache", type=int, default=0,
+                    help="RetrievalService LRU cache entries (0 = off)")
+    ap.add_argument("--no-retrieval-measure", action="store_true",
+                    help="drop the per-flush stage-timing host blocks "
+                         "(maximum decode/search overlap; the stats line "
+                         "then reports counters only)")
     args = ap.parse_args()
 
     from repro.models import transformer as tf
@@ -58,7 +67,10 @@ def main() -> None:
     ccfg = ds.search_config(nprobe=4, k=min(rag.k, 8), backend="ref")
 
     econfig = EngineConfig(model=cfg, rag=rag, disaggregate=disaggregate,
-                           lm_devices=1, ret_devices=ret_devices)
+                           lm_devices=1, ret_devices=ret_devices,
+                           async_retrieval=args.async_retrieval,
+                           retrieval_cache=args.retrieval_cache,
+                           retrieval_measure=not args.no_retrieval_measure)
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -82,6 +94,18 @@ def main() -> None:
         line += (f"; optimal LM:retrieval ratio estimate "
                  f"{engine.times.optimal_ratio():.2f}")
     print(line)
+    service = getattr(engine.retriever, "service", None)
+    if service is not None:
+        st = service.stats
+        line = (f"[serve] retrieval service: {st.batched_rows} rows in "
+                f"{st.num_batches} dispatches "
+                f"(coalescing {st.coalescing_factor():.1f}x, "
+                f"cache {st.cache_hits} hit / {st.cache_misses} miss)")
+        if service.config.measure:
+            line += (f"; queue-wait {st.queue_wait.mean_s * 1e6:.0f}us "
+                     f"scan {st.scan.mean_s * 1e6:.0f}us "
+                     f"merge {st.merge.mean_s * 1e6:.0f}us")
+        print(line)
 
 
 if __name__ == "__main__":

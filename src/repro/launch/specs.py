@@ -10,11 +10,11 @@ dsub=16 across all datasets).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import SHAPES, ArchSpec
 from repro.core.chamvs import ChamVSConfig

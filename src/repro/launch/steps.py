@@ -9,17 +9,14 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, ArchSpec
-from repro.core import chamvs as chamvs_lib
 from repro.core import rag as rag_lib
-from repro.core.chamvs import ChamVSConfig
 from repro.models import transformer as tf
 from repro.models.ctx import activation_sharding
 from repro.models.sharding import cache_specs, dp_axes, param_specs, sanitize
@@ -191,10 +188,11 @@ def build_serve_step(spec: ArchSpec, shape_name: str, mesh: Mesh,
     dq = ccfg.ivfpq.dim
     needs_proj = cfg.d_model != dq
 
-    search = chamvs_lib.make_distributed_search(
+    from repro.retrieval import router as router_lib
+    search = router_lib.build_search(
         mesh, ccfg, db_axes=dp, query_axis="model", nq=B) \
         if with_retrieval else None
-    pgather = chamvs_lib.make_distributed_gather(mesh, dp + ("model",)) \
+    pgather = router_lib.build_gather(mesh, dp + ("model",)) \
         if with_retrieval else None
 
     kv_batch = "dp" if B >= 8 else None

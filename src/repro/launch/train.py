@@ -10,10 +10,9 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.compat import use_mesh
-from repro.configs import SHAPES, get_arch
+from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_mesh_for
 from repro.models import transformer as tf

@@ -12,8 +12,6 @@ Three execution paths:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,7 @@
 """Primitive layers: norms, activations, RoPE (standard + M-RoPE), MLP."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ size is O(period), independent of depth — required to compile llama3-405b's
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ EXPERIMENTS.md §Dry-run memory table); the update math always runs in f32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,31 @@
+"""``repro.retrieval`` — ChamVS as a standalone, disaggregated
+vector-search service (paper §3-§4).
+
+The pieces, bottom-up:
+
+  * ``merge``   — hierarchical per-shard top-k' -> global top-K
+    K-selection (exact at every tree level);
+  * ``cache``   — LRU query-result cache on quantized query vectors;
+  * ``router``  — shard placement + query broadcast / payload gather
+    over the retrieval mesh (``ShardRouter``);
+  * ``stats``   — per-stage latency / QPS / coalescing accounting;
+  * ``service`` — ``RetrievalService``: in-flight request table,
+    deadline-based micro-batching, ``SearchHandle`` futures.
+
+``repro.serve`` plugs this in through ``AsyncRetriever``; the legacy
+``core.chamvs.search_single`` is a one-shot call into the same service.
+"""
+from repro.retrieval.cache import QueryCache
+from repro.retrieval.merge import flat_merge, hierarchical_merge, merge_topk
+from repro.retrieval.router import ShardRouter, build_gather, build_search
+from repro.retrieval.service import (LocalPipeline, RetrievalService,
+                                     RouterPipeline, SearchHandle,
+                                     ServiceConfig)
+from repro.retrieval.stats import RetrievalStats, StageStat
+
+__all__ = [
+    "LocalPipeline", "QueryCache", "RetrievalService", "RetrievalStats",
+    "RouterPipeline", "SearchHandle", "ServiceConfig", "ShardRouter",
+    "StageStat", "build_gather", "build_search", "flat_merge",
+    "hierarchical_merge", "merge_topk",
+]

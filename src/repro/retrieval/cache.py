@@ -1,0 +1,81 @@
+"""LRU query-result cache for the retrieval service.
+
+RALM decode queries are hidden states, so exact-match caching never
+fires; instead keys are the query vectors quantized to a grid
+(``round(q / quant)``) — queries within the quantization radius share a
+key, which is the regime where their top-K lists agree anyway. Entries
+are per query *row*; a batch lookup is all-or-nothing so a batched
+submission either skips the kernel entirely or runs as one batch (no
+partial-batch scatter on the hot path).
+
+Hit/miss counters live here (mirrored into ``RetrievalStats`` by the
+service); eviction is least-recently-*used* — both hits and inserts
+refresh recency.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class QueryCache:
+    """LRU map: quantized query vector -> (dists [K], ids [K])."""
+
+    def __init__(self, capacity: int, quant: float = 1e-3):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be > 0, got {capacity}")
+        self.capacity = capacity
+        self.quant = quant
+        self.hits = 0
+        self.misses = 0
+        self._data: "OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def key(self, row: np.ndarray) -> bytes:
+        q = np.asarray(row, np.float32)
+        return np.round(q / self.quant).astype(np.int64).tobytes()
+
+    # ------------------------------------------------------------------
+    def get_batch(self, queries: np.ndarray
+                  ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """All-or-nothing lookup of a [B, d] query batch.
+
+        Every row present -> (dists [B, K], ids [B, K]), counted as B
+        hits with recency refreshed. Any row absent -> None, counted as
+        B misses (the whole batch goes to the kernel)."""
+        queries = np.asarray(queries, np.float32)
+        keys = [self.key(row) for row in queries]
+        if any(kb not in self._data for kb in keys):
+            self.misses += len(keys)
+            return None
+        self.hits += len(keys)
+        rows = []
+        for kb in keys:
+            self._data.move_to_end(kb)
+            rows.append(self._data[kb])
+        return (np.stack([r[0] for r in rows]),
+                np.stack([r[1] for r in rows]))
+
+    def put_batch(self, queries: np.ndarray, dists: np.ndarray,
+                  ids: np.ndarray) -> None:
+        """Insert per-row results, evicting least-recently-used entries
+        beyond capacity."""
+        queries = np.asarray(queries, np.float32)
+        for row, d, i in zip(queries, np.asarray(dists), np.asarray(ids)):
+            kb = self.key(row)
+            self._data[kb] = (d, i)
+            self._data.move_to_end(kb)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    def contains(self, row: np.ndarray) -> bool:
+        """Membership probe without touching counters or recency."""
+        return self.key(row) in self._data
+
+    def clear(self) -> None:
+        self._data.clear()

@@ -1,0 +1,102 @@
+"""Hierarchical K-selection merge (paper §4.2, steps 7-8).
+
+Every memory node ships a truncated top-k' candidate list; the global
+top-K is their exact merge. This module owns that merge as a
+first-class, independently tested component (it used to be inlined in
+``core/chamvs.py`` / ``core/ivfpq.py``):
+
+  * ``flat_merge``   — single-level: concatenate all producers' lists
+    and run one K-selection over ``S * k'`` candidates (the CPU
+    coordinator flavor);
+  * ``hierarchical_merge`` — tree of partial K-selections with
+    ``fanout`` producers per node (the paper's network-aggregation
+    topology for large shard counts): each level keeps only
+    ``min(K, fanout * k')`` survivors, so no single selection ever sees
+    the full candidate set.
+
+Both are exact: for any shard count, the returned (distance, id) pairs
+equal the global top-K over the union of candidates (the property test
+in ``tests/test_retrieval.py`` asserts hierarchical ≡ flat). Padded or
+absent candidates are carried as ``(+inf, -1)`` and sort last, matching
+the per-shard convention in ``chamvs.shard_search``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to_k(dists: jnp.ndarray, ids: jnp.ndarray, k: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad [..., c] candidate lists with (+inf, -1) up to k columns."""
+    c = dists.shape[-1]
+    if c >= k:
+        return dists[..., :k], ids[..., :k]
+    widths = [(0, 0)] * (dists.ndim - 1) + [(0, k - c)]
+    return (jnp.pad(dists, widths, constant_values=jnp.inf),
+            jnp.pad(ids, widths, constant_values=-1))
+
+
+def _select(dists: jnp.ndarray, ids: jnp.ndarray, k: int
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k smallest along the last axis (ascending order)."""
+    keep = min(k, dists.shape[-1])
+    neg, pos = jax.lax.top_k(-dists, keep)
+    return -neg, jnp.take_along_axis(ids, pos, axis=-1)
+
+
+def flat_merge(dists: jnp.ndarray, ids: jnp.ndarray, k: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One K-selection over every producer's candidates.
+
+    dists/ids: [S, nq, k'] -> ([nq, K], [nq, K]), ascending by distance.
+    """
+    S, nq, c = dists.shape
+    d = jnp.moveaxis(dists, 0, 1).reshape(nq, S * c)
+    i = jnp.moveaxis(ids, 0, 1).reshape(nq, S * c)
+    return _pad_to_k(*_select(d, i, k), k)
+
+
+def hierarchical_merge(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
+                       fanout: int = 2
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tree-merge: ``fanout`` producers per node, exact at every level.
+
+    Keeping ``min(K, fanout * c)`` survivors per node loses nothing —
+    a candidate outside its node's top-K cannot be in the global top-K.
+
+    dists/ids: [S, nq, k'] -> ([nq, K], [nq, K]), ascending by distance.
+    """
+    if fanout < 2:
+        raise ValueError(f"fanout must be >= 2, got {fanout}")
+    d, i = dists, ids
+    while d.shape[0] > 1:
+        S, nq, c = d.shape
+        pad = (-S) % fanout
+        if pad:  # absent producers contribute (+inf, -1) candidates
+            d = jnp.concatenate(
+                [d, jnp.full((pad, nq, c), jnp.inf, d.dtype)], axis=0)
+            i = jnp.concatenate(
+                [i, jnp.full((pad, nq, c), -1, i.dtype)], axis=0)
+        groups = d.shape[0] // fanout
+        d = d.reshape(groups, fanout, nq, c).transpose(0, 2, 1, 3) \
+             .reshape(groups, nq, fanout * c)
+        i = i.reshape(groups, fanout, nq, c).transpose(0, 2, 1, 3) \
+             .reshape(groups, nq, fanout * c)
+        d, i = _select(d, i, k)
+    # the loop never runs for S == 1, and its last iteration may keep
+    # fewer than k sorted columns — one final exact selection either way
+    return _pad_to_k(*_select(d[0], i[0], k), k)
+
+
+def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
+               fanout: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The service's merge entry point: flat (``fanout=None``) or
+    hierarchical. Flat is the parity-exact default (identical candidate
+    ordering to the historical ``ivfpq.merge_topk``)."""
+    if fanout is None or dists.shape[0] <= 1:
+        return flat_merge(dists, ids, k)
+    return hierarchical_merge(dists, ids, k, fanout=fanout)

@@ -1,0 +1,337 @@
+"""``RetrievalService`` — ChamVS as a standalone vector-search service.
+
+The paper's disaggregation argument (§3) is that vector search deserves
+its own service tier, scaled and scheduled independently of the LM.
+This module is that tier in-process:
+
+  * an **in-flight request table**: every ``submit()`` gets a ticket and
+    a ``SearchHandle`` future, so callers (the serve scheduler) issue
+    queries for one wave of sequences while the previous wave is still
+    decoding;
+  * **deadline-based micro-batching**: pending queries from many
+    concurrent sequences coalesce into *one* batched IVF-scan/PQ-ADC/
+    top-k dispatch, flushed when ``max_batch`` rows accumulate, when the
+    oldest query's ``deadline_s`` expires, or explicitly at the end of a
+    scheduler wave (RAGO, arXiv:2503.14649, shows this cross-request
+    batching dominates RAG serving throughput);
+  * an **LRU result cache** on quantized query vectors — a hit skips
+    the kernel entirely;
+  * **per-stage stats** (queue wait / scan / merge / gather) feeding the
+    Fig. 9/10-style benchmark.
+
+The search math itself lives in ``core/chamvs.py`` (kernel frontend)
+and ``retrieval/merge.py`` (K-selection); this module only batches,
+caches, and accounts. ``chamvs.search_single`` is a one-shot call into
+this service, so there is exactly one search implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ivfpq
+from repro.core.chamvs import ChamVSConfig, shard_search
+from repro.core.ivfpq import IVFPQParams, IVFPQShard
+from repro.retrieval import merge as merge_lib
+from repro.retrieval.cache import QueryCache
+from repro.retrieval.stats import RetrievalStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Batching / caching knobs of one service instance."""
+    max_batch: int = 64           # flush when this many rows are pending
+    deadline_s: float = 0.0       # flush when the oldest row waited this
+    #                               long (checked at submit/poll; 0 = only
+    #                               max_batch or an explicit flush())
+    bucket_pow2: bool = True      # pad batches to powers of two so jit
+    #                               retraces O(log max_batch) shapes
+    cache_entries: int = 0        # LRU result-cache entries (0 = off).
+    #                               NOTE: the cache keys on host-side
+    #                               query values, so enabling it syncs
+    #                               each submit (and each flush, for the
+    #                               insert) — it trades async overlap for
+    #                               skipping whole kernel dispatches
+    cache_quant: float = 1e-3     # query quantization step for cache keys
+    merge_fanout: Optional[int] = None  # None = flat K-selection;
+    #                               >= 2 = hierarchical tree merge
+    measure: bool = True          # block per stage to record scan/merge
+    #                               times (off = maximum async overlap)
+
+
+# ---------------------------------------------------------------------------
+# the two pipeline stages, jitted once at module level (shared across
+# service instances and the `search_single` one-shot path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kk"))
+def _scan_stage(params: IVFPQParams, shards: Tuple[IVFPQShard, ...],
+                queries: jnp.ndarray, *, cfg: ChamVSConfig, kk: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Centroid scan + per-shard IVF/PQ scan + per-shard top-kk.
+
+    Returns stacked candidates (dists [S, nq, kk], ids [S, nq, kk])."""
+    _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
+    per = [shard_search(params, s, queries, probe_ids, cfg, kk)
+           for s in shards]
+    return (jnp.stack([p[0] for p in per]),
+            jnp.stack([p[1] for p in per]))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "fanout"))
+def _merge_stage(dists: jnp.ndarray, ids: jnp.ndarray, *, k: int,
+                 fanout: Optional[int]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return merge_lib.merge_topk(dists, ids, k, fanout=fanout)
+
+
+class LocalPipeline:
+    """Single-process scan/merge over a list of shards."""
+
+    row_multiple = 1    # no constraint on the batched row count
+
+    def __init__(self, params: IVFPQParams, shards: List[IVFPQShard],
+                 cfg: ChamVSConfig):
+        self.params = params
+        self.shards = tuple(shards)
+        self.cfg = cfg
+        self.kk = cfg.k_prime(len(self.shards))
+
+    @property
+    def k(self) -> int:
+        return self.cfg.k
+
+    def scan(self, queries: jnp.ndarray):
+        return _scan_stage(self.params, self.shards, queries,
+                           cfg=self.cfg, kk=self.kk)
+
+    def merge(self, candidates, fanout: Optional[int]):
+        d, i = candidates
+        return _merge_stage(d, i, k=self.cfg.k, fanout=fanout)
+
+
+class RouterPipeline:
+    """Scan/merge over a retrieval mesh via a ``ShardRouter``. The merge
+    happens in-network inside the shard_map graph, so the merge stage is
+    a pass-through (its time is accounted under scan and
+    ``ServiceConfig.merge_fanout`` does not apply)."""
+
+    def __init__(self, router, params: IVFPQParams,
+                 shards: List[IVFPQShard]):
+        self.router = router
+        self.cfg = router.cfg
+        # flushed batches must divide over the mesh's query-split columns
+        self.row_multiple = router.query_size
+        self.db_params = router.place_params(params)
+        self.db_shard = router.place_shards(shards)
+
+    @property
+    def k(self) -> int:
+        return self.cfg.k
+
+    def scan(self, queries: jnp.ndarray):
+        return self.router.search(self.db_params, self.db_shard, queries)
+
+    def merge(self, candidates, fanout: Optional[int]):
+        return candidates
+
+
+# ---------------------------------------------------------------------------
+# futures + the service
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _InFlight:
+    """One row-range of the in-flight request table."""
+    ticket: int
+    nrows: int
+    submit_t: float
+    result_d: Optional[jnp.ndarray] = None   # [nrows, K] once complete
+    result_i: Optional[jnp.ndarray] = None
+
+
+class SearchHandle:
+    """Future for one submitted query batch.
+
+    ``result()`` forces a flush if the batch is still queued, so a
+    handle can always be resolved — the scheduler simply resolves late
+    (after dispatching the next wave's decodes) to get overlap."""
+
+    def __init__(self, service: "RetrievalService", entry: _InFlight):
+        self._service = service
+        self._entry = entry
+
+    @property
+    def ticket(self) -> int:
+        return self._entry.ticket
+
+    def done(self) -> bool:
+        return self._entry.result_d is not None
+
+    def result(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if not self.done():
+            self._service.flush()
+        assert self._entry.result_d is not None
+        self._service._retire(self._entry)
+        return self._entry.result_d, self._entry.result_i
+
+
+class RetrievalService:
+    """Deadline-batched, cached, instrumented front door to ChamVS."""
+
+    def __init__(self, pipeline, config: Optional[ServiceConfig] = None):
+        self.pipeline = pipeline
+        self.config = config or ServiceConfig()
+        self.stats = RetrievalStats()
+        self.cache: Optional[QueryCache] = (
+            QueryCache(self.config.cache_entries,
+                       quant=self.config.cache_quant)
+            if self.config.cache_entries > 0 else None)
+        self._inflight: Dict[int, _InFlight] = {}
+        self._pending: List[Tuple[_InFlight, jnp.ndarray]] = []
+        self._pending_rows = 0
+        self._next_ticket = 0
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def local(cls, params: IVFPQParams, shards: List[IVFPQShard],
+              cfg: ChamVSConfig, config: Optional[ServiceConfig] = None
+              ) -> "RetrievalService":
+        """Single-process service (tests, builds, monolithic serving)."""
+        return cls(LocalPipeline(params, shards, cfg), config=config)
+
+    @classmethod
+    def distributed(cls, router, params: IVFPQParams,
+                    shards: List[IVFPQShard],
+                    config: Optional[ServiceConfig] = None
+                    ) -> "RetrievalService":
+        """Service over a retrieval mesh (one memory node per device)."""
+        return cls(RouterPipeline(router, params, shards), config=config)
+
+    # -- the in-flight request table ---------------------------------------
+
+    @property
+    def num_inflight(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def num_pending_rows(self) -> int:
+        return self._pending_rows
+
+    def _retire(self, entry: _InFlight) -> None:
+        self._inflight.pop(entry.ticket, None)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, queries: jnp.ndarray) -> SearchHandle:
+        """Enqueue a [B, d] query batch; returns a future.
+
+        A full-batch cache hit completes the handle immediately (no
+        kernel). Otherwise the rows join the pending micro-batch, which
+        flushes on ``max_batch`` / ``deadline_s`` / ``flush()``."""
+        q = jnp.asarray(queries, jnp.float32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be [B, d], got {q.shape}")
+        now = time.perf_counter()
+        entry = _InFlight(ticket=self._next_ticket, nrows=q.shape[0],
+                          submit_t=now)
+        self._next_ticket += 1
+        self._inflight[entry.ticket] = entry
+        self.stats.record_submit(entry.nrows)
+
+        if self.cache is not None:
+            hit = self.cache.get_batch(np.asarray(q))
+            if hit is not None:
+                entry.result_d = jnp.asarray(hit[0])
+                entry.result_i = jnp.asarray(hit[1])
+                self.stats.cache_hits += entry.nrows
+                self.stats.queue_wait.add(0.0)
+                return SearchHandle(self, entry)
+            self.stats.cache_misses += entry.nrows
+
+        self._pending.append((entry, q))
+        self._pending_rows += entry.nrows
+        if self._pending_rows >= self.config.max_batch:
+            self.flush()
+        else:
+            self.poll(now)
+        return SearchHandle(self, entry)
+
+    def poll(self, now: Optional[float] = None) -> None:
+        """Deadline check: flush if the oldest pending row has waited
+        longer than ``deadline_s``. Call from any serving loop tick."""
+        if not self._pending or self.config.deadline_s <= 0.0:
+            return
+        now = time.perf_counter() if now is None else now
+        if now - self._pending[0][0].submit_t >= self.config.deadline_s:
+            self.flush()
+
+    # -- the batched dispatch ----------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        b = n
+        if self.config.bucket_pow2:
+            b = 1
+            while b < n:
+                b *= 2
+        # distributed pipelines query-split over the TP columns, which
+        # requires the row count to divide evenly
+        mult = getattr(self.pipeline, "row_multiple", 1)
+        if b % mult:
+            b += mult - b % mult
+        return b
+
+    def flush(self) -> None:
+        """Coalesce every pending row into one scan+merge dispatch and
+        complete the corresponding in-flight entries."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        nrows, self._pending_rows = self._pending_rows, 0
+
+        batch = (pending[0][1] if len(pending) == 1
+                 else jnp.concatenate([q for _, q in pending], axis=0))
+        pad = self._bucket(nrows) - nrows
+        if pad:
+            batch = jnp.pad(batch, ((0, pad), (0, 0)))
+
+        measure = self.config.measure
+        t0 = time.perf_counter()
+        for entry, _ in pending:   # queue wait ends when the batch launches
+            self.stats.queue_wait.add(t0 - entry.submit_t)
+        candidates = self.pipeline.scan(batch)
+        if measure:
+            jax.block_until_ready(candidates)
+        t1 = time.perf_counter()
+        dists, ids = self.pipeline.merge(candidates,
+                                         self.config.merge_fanout)
+        if measure:
+            jax.block_until_ready((dists, ids))
+            self.stats.scan.add(t1 - t0)
+            self.stats.merge.add(time.perf_counter() - t1)
+        self.stats.record_batch(nrows)
+
+        offset = 0
+        for entry, q in pending:
+            entry.result_d = dists[offset:offset + entry.nrows]
+            entry.result_i = ids[offset:offset + entry.nrows]
+            if self.cache is not None:
+                self.cache.put_batch(np.asarray(q),
+                                     np.asarray(entry.result_d),
+                                     np.asarray(entry.result_i))
+            offset += entry.nrows
+
+    # -- synchronous convenience -------------------------------------------
+
+    def search(self, queries: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Blocking search: submit + flush + result (the legacy
+        ``chamvs.search_single`` surface)."""
+        return self.submit(queries).result()

@@ -1,0 +1,107 @@
+"""Per-stage accounting for the retrieval service (paper Fig. 9/10 axes).
+
+ChamVS latency decomposes into queue wait (micro-batching delay), the
+per-shard IVF/PQ scan, the hierarchical K-selection merge, and the
+payload gather. ``RetrievalStats`` accumulates each stage plus the
+service-level counters the benchmarks and the overlap/cache tests key
+on: how many queries arrived, how many *kernel dispatches* served them
+(coalescing factor), and the cache hit/miss split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class StageStat:
+    """Accumulated wall time for one pipeline stage."""
+    total_s: float = 0.0
+    count: int = 0
+    max_s: float = 0.0
+
+    def add(self, dt: float) -> None:
+        self.total_s += dt
+        self.count += 1
+        if dt > self.max_s:
+            self.max_s = dt
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return dict(mean_us=self.mean_s * 1e6, max_us=self.max_s * 1e6,
+                    total_s=self.total_s, count=self.count)
+
+
+class RetrievalStats:
+    """Counters + stage timings for one ``RetrievalService``.
+
+    ``num_batches`` counts kernel dispatches (one per flush); dividing
+    ``num_queries`` by it gives the achieved coalescing factor — the
+    quantity the deadline/max_batch knobs trade against queue wait.
+    """
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.num_queries = 0          # query rows submitted
+        self.num_batches = 0          # kernel dispatches (flushes)
+        self.batched_rows = 0         # query rows that reached a dispatch
+        self.cache_hits = 0           # query rows answered from cache
+        self.cache_misses = 0         # query rows that went to the kernel
+        self.max_coalesced = 0        # largest rows-per-dispatch seen
+        self.queue_wait = StageStat()
+        self.scan = StageStat()
+        self.merge = StageStat()
+        self.gather = StageStat()
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def record_submit(self, nrows: int) -> None:
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        self._t_last = now
+        self.num_queries += nrows
+
+    def record_batch(self, nrows: int) -> None:
+        self.num_batches += 1
+        self.batched_rows += nrows
+        self._t_last = time.perf_counter()
+        if nrows > self.max_coalesced:
+            self.max_coalesced = nrows
+
+    def coalescing_factor(self) -> float:
+        """Rows per kernel dispatch, over the rows that actually reached
+        a dispatch — cache-hit rows never produce one, so they are
+        excluded (else a cached run would overstate batching)."""
+        return self.batched_rows / self.num_batches if self.num_batches \
+            else 0.0
+
+    def qps(self) -> float:
+        if self._t_first is None or self._t_last is None or \
+                self._t_last <= self._t_first:
+            return 0.0
+        return self.num_queries / (self._t_last - self._t_first)
+
+    def snapshot(self) -> Dict[str, object]:
+        """The Fig. 9/10-style breakdown the benchmark emits."""
+        return dict(
+            num_queries=self.num_queries,
+            num_batches=self.num_batches,
+            batched_rows=self.batched_rows,
+            coalescing_factor=self.coalescing_factor(),
+            cache_hits=self.cache_hits,
+            cache_misses=self.cache_misses,
+            max_coalesced=self.max_coalesced,
+            qps=self.qps(),
+            queue_wait=self.queue_wait.summary(),
+            scan=self.scan.summary(),
+            merge=self.merge.summary(),
+            gather=self.gather.summary(),
+        )

@@ -14,18 +14,21 @@ See ``docs/serving.md`` for the API tour and the migration table from
 the old entry points.
 """
 from repro.core.rag import RagConfig
-from repro.serve.api import (DistributedRetriever, EngineConfig,
-                             LocalRetriever, RalmRequest, RalmResponse,
-                             Retriever)
+from repro.retrieval.service import (RetrievalService, SearchHandle,
+                                     ServiceConfig)
+from repro.serve.api import (AsyncRetriever, DistributedRetriever,
+                             EngineConfig, LocalRetriever, RalmRequest,
+                             RalmResponse, Retriever)
 from repro.serve.datastore import Datastore, DatastoreBuilder
 from repro.serve.engine import (DisaggregatedBackend, MonolithicBackend,
                                 PoolTimes, RalmEngine, SequenceState)
 from repro.serve.scheduler import RalmScheduler
 
 __all__ = [
-    "Datastore", "DatastoreBuilder", "DisaggregatedBackend",
-    "DistributedRetriever", "EngineConfig", "LocalRetriever",
-    "MonolithicBackend", "PoolTimes", "RagConfig", "RalmEngine",
-    "RalmRequest", "RalmResponse", "RalmScheduler", "Retriever",
-    "SequenceState",
+    "AsyncRetriever", "Datastore", "DatastoreBuilder",
+    "DisaggregatedBackend", "DistributedRetriever", "EngineConfig",
+    "LocalRetriever", "MonolithicBackend", "PoolTimes", "RagConfig",
+    "RalmEngine", "RalmRequest", "RalmResponse", "RalmScheduler",
+    "RetrievalService", "Retriever", "SearchHandle", "SequenceState",
+    "ServiceConfig",
 ]

@@ -14,9 +14,14 @@ that boundary as an API:
     conversion, with missing-id masking folded in so no caller ever
     re-implements it);
   * ``LocalRetriever`` — single-process ChamVS (tests, examples, builds);
-  * ``DistributedRetriever`` — ChamVS ``shard_map``-ed over a retrieval
-    mesh (the paper's disaggregated memory nodes), including the
-    sharded payload gather.
+  * ``DistributedRetriever`` — ChamVS routed over a retrieval mesh (the
+    paper's disaggregated memory nodes) via ``retrieval.ShardRouter``,
+    including the sharded payload gather;
+  * ``AsyncRetriever`` — the service-backed implementation: queries go
+    through a ``repro.retrieval.RetrievalService``, so concurrent
+    sequences' searches coalesce into one batched kernel dispatch and
+    ``search_async`` returns a ``SearchHandle`` the scheduler can hold
+    while decoding the next wave.
 
 Everything in ``repro.serve`` speaks only this protocol; monolithic and
 disaggregated deployments differ solely in which implementation is
@@ -25,20 +30,22 @@ plugged in.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import use_mesh
 from repro.core import chamvs as chamvs_lib
 from repro.core import rag as rag_lib
 from repro.core.chamvs import ChamVSConfig
 from repro.core.ivfpq import IVFPQParams, IVFPQShard
 from repro.core.rag import RagConfig
 from repro.models.config import ModelConfig
+from repro.retrieval.router import ShardRouter
+from repro.retrieval.service import RetrievalService, SearchHandle
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +85,12 @@ class EngineConfig:
     lm_devices: int = 1                  # LM pool size (disaggregated)
     ret_devices: int = 1                 # retrieval pool size (")
     max_active: Optional[int] = None     # scheduler admission limit
+    async_retrieval: bool = False        # route search through a
+    #                                      RetrievalService (AsyncRetriever)
+    retrieval_cache: int = 0             # service LRU cache entries (0=off)
+    retrieval_measure: bool = True       # per-stage service timings; False
+    #                                      drops the per-flush host blocks
+    #                                      for maximum decode/search overlap
 
 
 # ---------------------------------------------------------------------------
@@ -148,11 +161,11 @@ class LocalRetriever:
 
 
 class DistributedRetriever:
-    """ChamVS over a retrieval mesh: ``make_distributed_search`` for the
-    query path and ``make_distributed_gather`` for payload resolution
-    (both tables sharded over ``db_axes``, so no host round-trip and no
-    full-table all-gather — see ``make_distributed_gather``'s docstring).
-    """
+    """ChamVS over a retrieval mesh, routed by a ``ShardRouter``: the
+    router owns shard/table placement, the in-graph broadcast + scan +
+    merge for the query path, and the sharded payload gather (no host
+    round-trip and no full-table all-gather — see ``build_gather``'s
+    docstring)."""
 
     def __init__(self, mesh: Mesh, params: IVFPQParams,
                  shards: List[IVFPQShard], cfg: ChamVSConfig,
@@ -163,51 +176,69 @@ class DistributedRetriever:
                  query_axis: Optional[str] = None):
         self.mesh, self.cfg = mesh, cfg
         self.query_proj = query_proj
-        num_shards = 1
-        for a in db_axes:
-            if a in mesh.axis_names:
-                num_shards *= mesh.shape[a]
-        assert len(shards) == num_shards, \
-            f"one shard per memory node: {len(shards)} vs {num_shards}"
-        stacked = chamvs_lib.stack_shards(shards)
-        self.db_params = jax.device_put(params, NamedSharding(mesh, P()))
-        self.db_shard = jax.device_put(
-            stacked, NamedSharding(mesh, P(db_axes)))
-        self._search = jax.jit(chamvs_lib.make_distributed_search(
-            mesh, cfg, db_axes=db_axes, query_axis=query_axis))
-        self._gather = jax.jit(
-            chamvs_lib.make_distributed_gather(mesh, db_axes))
-        self.payload_tokens = self._shard_table(payload_tokens, num_shards,
-                                                db_axes)
-        self.chunk_table = self._shard_table(chunk_table, num_shards,
-                                             db_axes)
-
-    def _shard_table(self, table, num_shards: int, db_axes):
-        """Place a payload table across the memory nodes (pad the trailing
-        rows so every node holds an equal slice; padded rows are never
-        addressed because ids < N)."""
-        if table is None:
-            return None
-        n = table.shape[0]
-        rem = (-n) % num_shards
-        if rem:
-            pad = [(0, rem)] + [(0, 0)] * (table.ndim - 1)
-            table = jnp.pad(table, pad)
-        return jax.device_put(
-            table, NamedSharding(self.mesh, P(db_axes)))
+        self.router = ShardRouter(mesh, cfg, db_axes=db_axes,
+                                  query_axis=query_axis)
+        self.db_params = self.router.place_params(params)
+        self.db_shard = self.router.place_shards(shards)
+        self.payload_tokens = self.router.place_table(payload_tokens)
+        self.chunk_table = self.router.place_table(chunk_table)
 
     def search(self, queries: jnp.ndarray
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         q = jnp.asarray(queries, jnp.float32)
         if self.query_proj is not None:
             q = q @ self.query_proj
-        with use_mesh(self.mesh):
-            return self._search(self.db_params, self.db_shard, q)
+        return self.router.search(self.db_params, self.db_shard, q)
 
     def resolve(self, ids: jnp.ndarray, kind: str = "tokens"
                 ) -> jnp.ndarray:
         def gather(table, ids):
-            with use_mesh(self.mesh):
-                return self._gather(table, jnp.maximum(ids, 0))
+            return self.router.gather(table, jnp.maximum(ids, 0))
         return _resolve_from_tables(self.payload_tokens, self.chunk_table,
                                     ids, kind, gather=gather)
+
+
+@dataclasses.dataclass
+class AsyncRetriever:
+    """``Retriever`` backed by a ``repro.retrieval.RetrievalService``.
+
+    ``search`` keeps the synchronous protocol (submit + flush + result);
+    the extra surface is what the scheduler exploits:
+
+      * ``search_async(queries) -> SearchHandle`` — enqueue without
+        dispatching, so queries from every sequence in a wave coalesce;
+      * ``flush()`` — run the coalesced batch as one kernel dispatch.
+
+    Payload resolution is table-local like ``LocalRetriever``'s."""
+    service: RetrievalService
+    payload_tokens: Optional[jnp.ndarray] = None   # [N] next-token table
+    chunk_table: Optional[jnp.ndarray] = None      # [N, chunk_len]
+    query_proj: Optional[jnp.ndarray] = None       # [d_model, dq]
+
+    def _project(self, queries: jnp.ndarray) -> jnp.ndarray:
+        q = jnp.asarray(queries, jnp.float32)
+        if self.query_proj is not None:
+            q = q @ self.query_proj
+        return q
+
+    def search_async(self, queries: jnp.ndarray) -> SearchHandle:
+        return self.service.submit(self._project(queries))
+
+    def flush(self) -> None:
+        self.service.flush()
+
+    def search(self, queries: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.search_async(queries).result()
+
+    def resolve(self, ids: jnp.ndarray, kind: str = "tokens"
+                ) -> jnp.ndarray:
+        if not self.service.config.measure:
+            return _resolve_from_tables(self.payload_tokens,
+                                        self.chunk_table, ids, kind)
+        t0 = time.perf_counter()
+        out = _resolve_from_tables(self.payload_tokens, self.chunk_table,
+                                   ids, kind)
+        jax.block_until_ready(out)
+        self.service.stats.gather.add(time.perf_counter() - t0)
+        return out

@@ -30,7 +30,9 @@ from repro.core.ivfpq import (IVFPQConfig, IVFPQParams, IVFPQShard,
                               build_shards, train_ivfpq)
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
-from repro.serve.api import DistributedRetriever, LocalRetriever
+from repro.retrieval.service import RetrievalService, ServiceConfig
+from repro.serve.api import (AsyncRetriever, DistributedRetriever,
+                             LocalRetriever)
 
 
 @dataclasses.dataclass
@@ -58,6 +60,21 @@ class Datastore:
         """Single-process ``Retriever`` over this datastore."""
         return LocalRetriever(params=self.params, shards=self.shards,
                               cfg=search_cfg,
+                              payload_tokens=self.payload_tokens,
+                              chunk_table=self.chunk_table,
+                              query_proj=query_proj)
+
+    def async_retriever(self, search_cfg: ChamVSConfig,
+                        query_proj: Optional[jnp.ndarray] = None,
+                        service_cfg: Optional[ServiceConfig] = None
+                        ) -> AsyncRetriever:
+        """Service-backed ``Retriever``: searches go through a
+        ``RetrievalService`` (micro-batching + futures + optional result
+        cache), so the scheduler coalesces concurrent sequences' queries
+        into one batched kernel dispatch."""
+        service = RetrievalService.local(self.params, self.shards,
+                                         search_cfg, config=service_cfg)
+        return AsyncRetriever(service=service,
                               payload_tokens=self.payload_tokens,
                               chunk_table=self.chunk_table,
                               query_proj=query_proj)

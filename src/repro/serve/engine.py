@@ -261,6 +261,14 @@ class RalmEngine:
                 f"found {len(jax.devices())} — falling back to a "
                 "monolithic engine (no PoolTimes).", RuntimeWarning,
                 stacklevel=2)
+        if config.disaggregate and len(jax.devices()) >= 2 and \
+                config.async_retrieval:
+            import warnings
+            warnings.warn(
+                "EngineConfig.async_retrieval is not wired into the "
+                "disaggregated path yet — falling back to the synchronous "
+                "DistributedRetriever (no RetrievalService coalescing or "
+                "cache).", RuntimeWarning, stacklevel=2)
         if config.disaggregate and len(jax.devices()) >= 2:
             eng = cls.disaggregated(
                 params, config.model, config.rag, datastore.params,
@@ -271,11 +279,26 @@ class RalmEngine:
                 ret_devices=config.ret_devices, query_proj=query_proj,
                 max_seq=config.max_seq)
         else:
-            eng = cls.monolithic(
-                params, config.model, config.rag,
-                retriever=datastore.retriever(search_cfg,
-                                              query_proj=query_proj),
-                max_seq=config.max_seq)
+            if config.retrieval_cache > 0 and not config.async_retrieval:
+                import warnings
+                warnings.warn(
+                    "EngineConfig.retrieval_cache requires "
+                    "async_retrieval=True (the cache lives in the "
+                    "RetrievalService) — ignoring it.", RuntimeWarning,
+                    stacklevel=2)
+            if config.async_retrieval:
+                from repro.retrieval.service import ServiceConfig
+                retriever = datastore.async_retriever(
+                    search_cfg, query_proj=query_proj,
+                    service_cfg=ServiceConfig(
+                        cache_entries=config.retrieval_cache,
+                        measure=config.retrieval_measure))
+            else:
+                retriever = datastore.retriever(search_cfg,
+                                                query_proj=query_proj)
+            eng = cls.monolithic(params, config.model, config.rag,
+                                 retriever=retriever,
+                                 max_seq=config.max_seq)
         eng.scheduler.max_active = config.max_active
         return eng
 
@@ -314,14 +337,49 @@ class RalmEngine:
             self.times.search_s.append(time.time() - t0)
         return dists, ids
 
+    def _retrieval_due(self, step: int) -> bool:
+        # pure host arithmetic (same semantics as rag.should_retrieve):
+        # this runs in phase 2a while decodes are in flight, so it must
+        # not touch the device
+        return (self.retriever is not None and self.rag.mode != "none" and
+                (self.rag.interval <= 1 or step % self.rag.interval == 0))
+
+    def dispatch_search(self, seq: SequenceState, hidden: jnp.ndarray):
+        """Phase 2a: issue this sequence's retrieval query, without
+        dispatching the kernel. Returns a ``SearchHandle`` when the
+        retriever batches asynchronously (``AsyncRetriever``), else
+        ``None`` — the synchronous path searches inside ``finish_step``.
+        """
+        if not self._retrieval_due(seq.step):
+            return None
+        submit = getattr(self.retriever, "search_async", None)
+        if submit is None:
+            return None
+        return submit(hidden)
+
+    def flush_searches(self) -> None:
+        """Phase 2b: coalesce every query issued by ``dispatch_search``
+        into one batched kernel dispatch (no-op for sync retrievers)."""
+        flush = getattr(self.retriever, "flush", None)
+        if flush is not None:
+            flush()
+
     def finish_step(self, seq: SequenceState, logits: jnp.ndarray,
-                    hidden: jnp.ndarray) -> None:
-        """Phase 2: retrieve (if due) + integrate + sample one token."""
+                    hidden: jnp.ndarray, search=None) -> None:
+        """Phase 2 (2c when async): retrieve (if due) + integrate +
+        sample one token. ``search`` is the ``SearchHandle`` returned by
+        ``dispatch_search``, if any."""
         s, rag = seq.step, self.rag
         log_or_prob = logits
-        if self.retriever is not None and rag.mode != "none" and \
-                bool(rag_lib.should_retrieve(jnp.asarray(s), rag.interval)):
-            dists, ids = self._search(hidden)
+        if self._retrieval_due(s):
+            if search is not None:
+                t0 = time.time()
+                dists, ids = search.result()
+                if self.times is not None:
+                    dists.block_until_ready()
+                    self.times.search_s.append(time.time() - t0)
+            else:
+                dists, ids = self._search(hidden)
             if seq.request.trace is not None:
                 seq.request.trace.append(dict(step=s, ids=np.asarray(ids)))
             if rag.mode == "knnlm":

@@ -11,8 +11,15 @@ sequence one token in two phases:
      — the paper's multi-process ChamLM overlap (Fig. 12 throughput).
      (PoolTimes instrumentation blocks per pool step for measurement;
      build the backend with ``measure=False`` for maximum overlap.)
-  phase 2 — retrieval + integration + sampling per sequence, in the
-     order the decodes were dispatched.
+  phase 2a — issue every sequence's retrieval query. With an
+     ``AsyncRetriever`` the queries only *enqueue* on the
+     ``RetrievalService`` (each returns a ``SearchHandle`` future) while
+     the phase-1 decodes are still in flight.
+  phase 2b — one ``flush_searches()``: the whole wave's queries
+     coalesce into a single batched IVF-scan/PQ-ADC/top-k dispatch.
+  phase 2c — per sequence: resolve the handle (or search synchronously
+     for plain retrievers) + integration + sampling, in the order the
+     decodes were dispatched.
 
 Sequences finish independently (continuous batching): a request that was
 submitted later, or that asks for fewer steps, completes without waiting
@@ -89,11 +96,16 @@ class RalmScheduler:
         # phase 1: dispatch decode for every sequence (async)
         pending = [(seq, *self.engine.dispatch_decode(seq))
                    for seq in self.active]
-        # phase 2: retrieval + integrate + sample (overlaps phase-1 work
+        # phase 2a: issue every sequence's retrieval query (futures)
+        searches = [self.engine.dispatch_search(seq, hidden)
+                    for seq, _, hidden in pending]
+        # phase 2b: one coalesced kernel dispatch for the whole wave
+        self.engine.flush_searches()
+        # phase 2c: resolve + integrate + sample (overlaps phase-1 work
         # still in flight on the other pool)
         still_active = []
-        for seq, logits, hidden in pending:
-            self.engine.finish_step(seq, logits, hidden)
+        for (seq, logits, hidden), search in zip(pending, searches):
+            self.engine.finish_step(seq, logits, hidden, search=search)
             if seq.done:
                 finished.append(RalmResponse(
                     request_id=seq.request.request_id,

@@ -2,10 +2,9 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.approx_topk_math import (binom_pmf, binom_tail,
+from repro.core.approx_topk_math import (binom_pmf,
                                          queue_overflow_prob,
                                          resource_saving,
                                          truncated_queue_len)

@@ -1,5 +1,4 @@
 """Checkpoint roundtrip/atomicity + deterministic data pipeline."""
-import pathlib
 
 import jax
 import jax.numpy as jnp

@@ -78,6 +78,42 @@ print("PROBE_SPLIT_OK")
     assert "PROBE_SPLIT_OK" in out
 
 
+def test_distributed_retrieval_service():
+    """RetrievalService over a ShardRouter (the disaggregated service
+    tier): coalesced submissions against the mesh == single-process
+    search, including the query-split row-multiple padding (5 rows on a
+    2-column query split pad to 6, results slice back to 5)."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core.ivfpq import *
+from repro.core.chamvs import ChamVSConfig, search_single
+from repro.retrieval import RetrievalService, ServiceConfig, ShardRouter
+key = jax.random.PRNGKey(0)
+cfg_i = IVFPQConfig(dim=64, nlist=64, m=8, list_cap=128)
+vecs = jax.random.normal(key, (8192, 64))
+params = train_ivfpq(key, vecs[:4096], cfg_i, kmeans_iters=6)
+shards = build_shards(params, np.asarray(vecs), cfg_i, num_shards=4)
+cfg = ChamVSConfig(ivfpq=cfg_i, nprobe=16, k=20, backend="ref")
+q = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+d0, i0 = search_single(params, shards, q, cfg)
+mesh = make_mesh((4, 2), ("data", "model"))
+router = ShardRouter(mesh, cfg, db_axes=("data",), query_axis="model")
+assert router.query_size == 2
+svc = RetrievalService.distributed(router, params, shards,
+                                   ServiceConfig(bucket_pow2=False))
+h1 = svc.submit(q[:2]); h2 = svc.submit(q[2:])   # 5 rows -> pad to 6
+svc.flush()
+d1 = np.concatenate([np.asarray(h1.result()[0]), np.asarray(h2.result()[0])])
+i1 = np.concatenate([np.asarray(h1.result()[1]), np.asarray(h2.result()[1])])
+assert svc.stats.num_batches == 1 and svc.stats.max_coalesced == 5
+assert np.allclose(np.asarray(d0), d1, rtol=1e-5, atol=1e-5)
+assert (np.asarray(i0) == i1).all()
+print("DIST_SERVICE_OK")
+""")
+    assert "DIST_SERVICE_OK" in out
+
+
 def test_distributed_gather():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np

@@ -1,6 +1,5 @@
 """Fault tolerance: crash/restart bit-equivalence, stragglers, elasticity."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

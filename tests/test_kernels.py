@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.kernels.pq_adc.ops import pq_adc_topk, pq_shared_scan
-from repro.kernels.pq_adc.ref import ref_adc, ref_shared_scan
+from repro.kernels.pq_adc.ref import ref_adc
 from repro.kernels.ivf_scan.ops import ivf_index_scan
 from repro.kernels.ivf_scan.ref import ref_ivf_scan
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_arch, list_archs
+from repro.configs import get_arch, list_archs
 from repro.models import transformer as tf
 
 ARCHS = list(list_archs(include_paper=True))

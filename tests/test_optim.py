@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, strategies as st
 
-from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+from repro.optim.adamw import (AdamWConfig, apply_updates,
                                clip_by_global_norm, init_opt_state,
                                lr_schedule)
 from repro.optim.compression import dequantize_int8, quantize_int8

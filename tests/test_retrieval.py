@@ -1,0 +1,283 @@
+"""The ``repro.retrieval`` service tier: hierarchical merge, LRU query
+cache, and the batched ``RetrievalService`` (in-flight table, deadline
+micro-batching, coalescing, cache fast-path, per-stage stats).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.chamvs import ChamVSConfig, search_single, shard_search
+from repro.core.ivfpq import (IVFPQConfig, build_shards, merge_topk,
+                              scan_ivf_index, train_ivfpq)
+from repro.retrieval import (QueryCache, RetrievalService, ServiceConfig,
+                             flat_merge, hierarchical_merge)
+
+
+# ---------------------------------------------------------------------------
+# merge: hierarchical == flat == reference
+# ---------------------------------------------------------------------------
+
+def _random_candidates(rng, num_shards, nq, kk):
+    """Distinct distances (a permutation), so top-K has a unique answer
+    and flat/hierarchical must agree exactly."""
+    d = rng.permutation(num_shards * nq * kk).astype(np.float32)
+    d = d.reshape(num_shards, nq, kk)
+    i = rng.integers(0, 10_000, size=(num_shards, nq, kk)).astype(np.int32)
+    return jnp.sort(jnp.asarray(d), axis=-1), jnp.asarray(i)
+
+
+def test_flat_merge_matches_legacy_merge_topk():
+    rng = np.random.default_rng(0)
+    d, i = _random_candidates(rng, num_shards=5, nq=3, kk=7)
+    fd, fi = flat_merge(d, i, k=10)
+    md, mi = merge_topk(d, i, 10)       # the ivfpq-level entry point
+    assert (np.asarray(fd) == np.asarray(md)).all()
+    assert (np.asarray(fi) == np.asarray(mi)).all()
+    # ascending, exact global top-10 of each query's candidate union
+    ref = np.sort(np.asarray(d).transpose(1, 0, 2).reshape(3, -1),
+                  axis=-1)[:, :10]
+    assert np.allclose(np.asarray(fd), ref)
+
+
+@pytest.mark.parametrize("num_shards,fanout", [(1, 2), (2, 2), (5, 2),
+                                               (7, 3), (8, 4), (9, 2)])
+def test_hierarchical_merge_equals_flat(num_shards, fanout):
+    rng = np.random.default_rng(num_shards * 10 + fanout)
+    d, i = _random_candidates(rng, num_shards, nq=4, kk=6)
+    fd, fi = flat_merge(d, i, k=9)
+    hd, hi = hierarchical_merge(d, i, k=9, fanout=fanout)
+    assert (np.asarray(fd) == np.asarray(hd)).all()
+    assert (np.asarray(fi) == np.asarray(hi)).all()
+
+
+def test_hierarchical_merge_single_shard_unsorted_input():
+    """Regression: S == 1 skips the tree loop entirely, but the final
+    selection must still sort/select rather than truncate raw input."""
+    d = jnp.asarray([[[5.0, 1.0, 3.0, 2.0]]])
+    i = jnp.asarray([[[50, 10, 30, 20]]], jnp.int32)
+    hd, hi = hierarchical_merge(d, i, k=2, fanout=2)
+    assert np.asarray(hd).tolist() == [[1.0, 2.0]]
+    assert np.asarray(hi).tolist() == [[10, 20]]
+
+
+def test_merge_pads_when_fewer_candidates_than_k():
+    rng = np.random.default_rng(1)
+    d, i = _random_candidates(rng, num_shards=2, nq=2, kk=3)
+    for fn in (lambda: flat_merge(d, i, k=10),
+               lambda: hierarchical_merge(d, i, k=10, fanout=2)):
+        od, oi = fn()
+        assert od.shape == (2, 10) and oi.shape == (2, 10)
+        assert np.isinf(np.asarray(od)[:, 6:]).all()
+        assert (np.asarray(oi)[:, 6:] == -1).all()
+
+
+@given(st.integers(1, 12), st.integers(1, 4), st.integers(1, 24),
+       st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_hierarchical_merge_is_global_topk(num_shards, nq, k, fanout, seed):
+    """Property (satellite): hierarchical merge == flat global top-k for
+    random shard counts / fanouts."""
+    rng = np.random.default_rng(seed)
+    kk = rng.integers(1, 9)
+    d, i = _random_candidates(rng, num_shards, nq, int(kk))
+    hd, hi = hierarchical_merge(d, i, k=k, fanout=fanout)
+    fd, fi = flat_merge(d, i, k=k)
+    assert (np.asarray(hd) == np.asarray(fd)).all()
+    assert (np.asarray(hi) == np.asarray(fi)).all()
+    # and flat is the true global top-k of each query's candidate union
+    ref = np.sort(np.asarray(d).transpose(1, 0, 2).reshape(nq, -1),
+                  axis=-1)
+    width = min(k, ref.shape[-1])
+    assert np.allclose(np.asarray(fd)[:, :width], ref[:, :width])
+
+
+# ---------------------------------------------------------------------------
+# cache: hit/miss semantics + LRU eviction order
+# ---------------------------------------------------------------------------
+
+def _rows(*vals, d=4):
+    return np.stack([np.full((d,), v, np.float32) for v in vals])
+
+
+def test_cache_hit_miss_counters():
+    c = QueryCache(capacity=8)
+    q = _rows(1.0, 2.0)
+    assert c.get_batch(q) is None and c.misses == 2 and c.hits == 0
+    c.put_batch(q, np.zeros((2, 3)), np.ones((2, 3), np.int32))
+    got = c.get_batch(q)
+    assert got is not None and c.hits == 2
+    assert got[0].shape == (2, 3) and (got[1] == 1).all()
+
+
+def test_cache_batch_lookup_is_all_or_nothing():
+    c = QueryCache(capacity=8)
+    c.put_batch(_rows(1.0), np.zeros((1, 3)), np.zeros((1, 3), np.int32))
+    # one row cached + one not -> whole batch is a miss
+    assert c.get_batch(_rows(1.0, 9.0)) is None
+    assert c.misses == 2 and c.hits == 0
+
+
+def test_cache_eviction_is_lru_order():
+    c = QueryCache(capacity=2)
+    mk = lambda v: (_rows(v), np.full((1, 2), v), np.full((1, 2), int(v)))
+    for v in (1.0, 2.0):
+        q, d, i = mk(v)
+        c.put_batch(q, d, i)
+    assert c.get_batch(_rows(1.0)) is not None   # refresh 1 -> LRU is 2
+    q3, d3, i3 = mk(3.0)
+    c.put_batch(q3, d3, i3)                      # evicts 2, not 1
+    assert len(c) == 2
+    assert c.contains(_rows(1.0)[0]) and c.contains(_rows(3.0)[0])
+    assert not c.contains(_rows(2.0)[0])
+    # and insertion order alone is FIFO when nothing is touched
+    c2 = QueryCache(capacity=2)
+    for v in (1.0, 2.0, 3.0):
+        q, d, i = mk(v)
+        c2.put_batch(q, d, i)
+    assert not c2.contains(_rows(1.0)[0])
+    assert c2.contains(_rows(2.0)[0]) and c2.contains(_rows(3.0)[0])
+
+
+def test_cache_quantization_radius():
+    c = QueryCache(capacity=4, quant=1e-2)
+    c.put_batch(_rows(1.0), np.zeros((1, 2)), np.zeros((1, 2), np.int32))
+    assert c.get_batch(_rows(1.001)) is not None    # same grid cell
+    assert c.get_batch(_rows(1.4)) is None          # different cell
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_index():
+    key = jax.random.PRNGKey(0)
+    icfg = IVFPQConfig(dim=32, nlist=16, m=8, list_cap=256)
+    vecs = jax.random.normal(key, (2048, 32))
+    params = train_ivfpq(key, vecs[:1024], icfg, kmeans_iters=4)
+    shards = build_shards(params, np.asarray(vecs), icfg, num_shards=4)
+    cfg = ChamVSConfig(ivfpq=icfg, nprobe=8, k=10, backend="ref")
+    queries = jax.random.normal(jax.random.PRNGKey(1), (6, 32))
+    return params, shards, cfg, queries
+
+
+def _reference(params, shards, cfg, queries):
+    kk = cfg.k_prime(len(shards))
+    _, probe = scan_ivf_index(params, queries, cfg.nprobe)
+    per = [shard_search(params, s, queries, probe, cfg, kk) for s in shards]
+    return merge_topk(jnp.stack([p[0] for p in per]),
+                      jnp.stack([p[1] for p in per]), cfg.k)
+
+
+def test_search_single_routes_through_service(small_index):
+    """The legacy entry point and the service are one implementation."""
+    params, shards, cfg, q = small_index
+    d, i = search_single(params, shards, q, cfg)
+    rd, ri = _reference(params, shards, cfg, q)
+    assert (np.asarray(i) == np.asarray(ri)).all()
+    assert np.allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
+def test_service_coalesces_submissions(small_index):
+    """Two sequences' queries -> ONE batched kernel dispatch, results
+    identical to searching each alone (acceptance criterion)."""
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg)
+    h1 = svc.submit(q[:2])
+    h2 = svc.submit(q[2:])
+    assert not h1.done() and not h2.done()
+    assert svc.num_pending_rows == 6 and svc.num_inflight == 2
+    svc.flush()
+    assert h1.done() and h2.done()
+    assert svc.stats.num_batches == 1            # one coalesced dispatch
+    assert svc.stats.max_coalesced == 6
+    d1, i1 = h1.result()
+    d2, i2 = h2.result()
+    assert svc.num_inflight == 0                 # retired from the table
+    rd, ri = _reference(params, shards, cfg, q)
+    got_i = np.concatenate([np.asarray(i1), np.asarray(i2)])
+    assert (got_i == np.asarray(ri)).all()
+
+
+def test_service_result_forces_flush(small_index):
+    """A handle can always be resolved: result() on a queued entry
+    triggers the flush itself."""
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg)
+    h = svc.submit(q[:1])
+    d, i = h.result()
+    assert svc.stats.num_batches == 1 and d.shape == (1, cfg.k)
+
+
+def test_service_max_batch_autoflush(small_index):
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg,
+                                 ServiceConfig(max_batch=4))
+    h1 = svc.submit(q[:2])
+    assert not h1.done()                          # 2 < max_batch
+    h2 = svc.submit(q[2:4])                       # hits max_batch
+    assert h1.done() and h2.done()
+    assert svc.stats.num_batches == 1
+
+
+def test_service_deadline_flush(small_index):
+    """A submit after the oldest pending row exceeds deadline_s flushes
+    the accumulated micro-batch (deadline-based batching)."""
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg,
+                                 ServiceConfig(deadline_s=0.01))
+    h1 = svc.submit(q[:1])
+    assert not h1.done()
+    time.sleep(0.02)
+    svc.submit(q[1:2])                            # deadline expired -> flush
+    assert h1.done() and svc.stats.num_batches == 1
+    # poll() alone also triggers it
+    h3 = svc.submit(q[2:3])
+    time.sleep(0.02)
+    svc.poll()
+    assert h3.done() and svc.stats.num_batches == 2
+
+
+def test_service_cache_hit_skips_kernel(small_index):
+    """Acceptance criterion: a cached query batch completes with NO new
+    kernel dispatch, and returns identical results."""
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg,
+                                 ServiceConfig(cache_entries=64))
+    d0, i0 = svc.search(q[:3])
+    assert svc.stats.num_batches == 1
+    assert svc.stats.cache_misses == 3
+    h = svc.submit(q[:3])
+    assert h.done()                               # answered at submit time
+    d1, i1 = h.result()
+    assert svc.stats.num_batches == 1             # kernel NOT dispatched
+    assert svc.stats.cache_hits == 3
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    assert np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+def test_service_hierarchical_merge_matches_flat(small_index):
+    params, shards, cfg, q = small_index
+    flat = RetrievalService.local(params, shards, cfg)
+    tree = RetrievalService.local(params, shards, cfg,
+                                  ServiceConfig(merge_fanout=2))
+    fd, fi = flat.search(q)
+    td, ti = tree.search(q)
+    assert (np.asarray(fi) == np.asarray(ti)).all()
+    assert np.allclose(np.asarray(fd), np.asarray(td))
+
+
+def test_service_stats_breakdown(small_index):
+    params, shards, cfg, q = small_index
+    svc = RetrievalService.local(params, shards, cfg)
+    svc.search(q[:2])
+    svc.search(q[2:4])
+    snap = svc.stats.snapshot()
+    assert snap["num_batches"] == 2 and snap["num_queries"] == 4
+    for stage in ("queue_wait", "scan", "merge"):
+        assert snap[stage]["count"] == 2, stage
+        assert snap[stage]["mean_us"] >= 0.0
+    assert snap["qps"] > 0

@@ -20,8 +20,9 @@ import pytest
 from repro.configs import get_arch
 from repro.core.generate import RetrievalEngine, generate
 from repro.models import transformer as tf
-from repro.serve import (DatastoreBuilder, LocalRetriever, RagConfig,
-                         RalmEngine, RalmRequest, Retriever)
+from repro.serve import (AsyncRetriever, DatastoreBuilder, LocalRetriever,
+                         RagConfig, RalmEngine, RalmRequest, Retriever,
+                         ServiceConfig)
 
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
@@ -179,6 +180,97 @@ def test_scheduler_admission_control(tiny_ralm):
         seen_active.append(eng.scheduler.num_active)
     assert max(seen_active) <= 1
     assert [r.request_id for r in completions] == [0, 1, 2]
+
+
+def test_scheduler_empty_queue_step(tiny_ralm):
+    """step() with nothing queued or active is a no-op, not an error."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg))
+    assert not eng.scheduler.has_work
+    assert eng.step() == []
+    assert eng.scheduler.num_active == 0
+    assert eng.run() == []              # draining nothing is also fine
+
+
+def test_scheduler_all_sequences_finish_same_step(tiny_ralm):
+    """Every active sequence completing on one step() empties the
+    scheduler in that call and reports all completions at once."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg))
+    rids = [eng.submit(RalmRequest(prompt=jnp.asarray(corpus[i:i+1, :8]),
+                                   steps=1)) for i in range(3)]
+    done = eng.step()                   # one decode step finishes all 3
+    assert sorted(r.request_id for r in done) == sorted(rids)
+    assert not eng.scheduler.has_work and eng.scheduler.num_active == 0
+
+
+def test_scheduler_max_active_reached_blocks_admission(tiny_ralm):
+    """While max_active sequences are in flight, later submissions wait
+    in the queue (they are admitted only as slots free up)."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg))
+    eng.scheduler.max_active = 2
+    for i in range(4):
+        eng.submit(RalmRequest(prompt=jnp.asarray(corpus[i:i+1, :8]),
+                               steps=3))
+    eng.step()
+    assert eng.scheduler.num_active == 2         # admission capped
+    assert len(eng.scheduler.queue) == 2         # rest still queued
+    completions = eng.run()
+    assert [r.request_id for r in completions] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# AsyncRetriever + RetrievalService: parity, coalescing, cache fast-path
+# ---------------------------------------------------------------------------
+
+def test_async_retriever_parity(tiny_ralm):
+    """Acceptance criterion: greedy outputs via AsyncRetriever +
+    RetrievalService are token-identical to the synchronous
+    LocalRetriever path, under pipelined multi-request serving."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    prompts = [jnp.asarray(corpus[:2, :8]), jnp.asarray(corpus[2:4, :8])]
+    sync_eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg))
+    out_sync = sync_eng.generate_batches(prompts, steps=6)
+    aret = ds.async_retriever(ccfg)
+    assert isinstance(aret, AsyncRetriever) and isinstance(aret, Retriever)
+    async_eng = RalmEngine.monolithic(params, cfg, rag, aret)
+    out_async = async_eng.generate_batches(prompts, steps=6)
+    for a, b in zip(out_sync, out_async):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_async_overlap_coalesces_waves(tiny_ralm):
+    """Acceptance criterion: >= 2 concurrent sequences' queries coalesce
+    into a single batched kernel dispatch per scheduler wave."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    aret = ds.async_retriever(ccfg)
+    eng = RalmEngine.monolithic(params, cfg, rag, aret)
+    eng.submit(RalmRequest(prompt=jnp.asarray(corpus[:2, :8]), steps=4))
+    eng.submit(RalmRequest(prompt=jnp.asarray(corpus[2:4, :8]), steps=4))
+    eng.run()
+    st = aret.service.stats
+    assert st.num_queries == 16                  # 2 req x 2 rows x 4 steps
+    assert st.num_batches == 4                   # ONE dispatch per wave
+    assert st.max_coalesced == 4                 # both sequences' rows
+    assert st.coalescing_factor() == pytest.approx(4.0)
+
+
+def test_async_cache_hit_skips_kernel(tiny_ralm):
+    """Acceptance criterion: a repeated prompt is answered from the
+    result cache — zero new kernel dispatches — with identical tokens."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    aret = ds.async_retriever(
+        ccfg, service_cfg=ServiceConfig(cache_entries=256,
+                                        cache_quant=1e-5))
+    eng = RalmEngine.monolithic(params, cfg, rag, aret)
+    out1 = np.asarray(eng.generate(jnp.asarray(corpus[:2, :8]), steps=4))
+    n_dispatch = aret.service.stats.num_batches
+    assert n_dispatch > 0 and aret.service.stats.cache_hits == 0
+    out2 = np.asarray(eng.generate(jnp.asarray(corpus[:2, :8]), steps=4))
+    assert (out1 == out2).all()
+    assert aret.service.stats.num_batches == n_dispatch   # kernel skipped
+    assert aret.service.stats.cache_hits == 8             # 2 rows x 4 steps
 
 
 # ---------------------------------------------------------------------------

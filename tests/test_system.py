@@ -14,8 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import generate as gen_lib
-from repro.core.chamvs import ChamVSConfig, search_single
+from repro.core.chamvs import ChamVSConfig
 from repro.core.generate import RetrievalEngine, generate
 from repro.core.ivfpq import IVFPQConfig, build_shards, train_ivfpq
 from repro.core.rag import RagConfig, knnlm_interpolate
