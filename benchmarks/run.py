@@ -6,6 +6,10 @@ inside `derived`; wall-clock rows on this host are tagged `measured`.
 ``--mode retrieval`` instead sweeps batch size x nprobe against the
 ``RetrievalService`` and writes ``BENCH_retrieval.json`` with the
 queue-wait / scan / merge breakdown (see benchmarks/retrieval_bench.py).
+
+``--mode serve`` sweeps tokens/s vs. active wave size over the
+wave-batched serving engine and writes ``BENCH_serve.json`` with the
+per-pool step breakdown (see benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
@@ -17,15 +21,20 @@ def main() -> None:
     # allow running as `python -m benchmarks.run` from the repo root
     sys.path.insert(0, "src")
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["figures", "retrieval"],
+    ap.add_argument("--mode", choices=["figures", "retrieval", "serve"],
                     default="figures")
-    ap.add_argument("--out", default="BENCH_retrieval.json",
-                    help="output path for --mode retrieval")
+    ap.add_argument("--out", default=None,
+                    help="output path for --mode retrieval/serve")
     args = ap.parse_args()
 
     if args.mode == "retrieval":
         from benchmarks import retrieval_bench
-        retrieval_bench.main(args.out)
+        retrieval_bench.main(args.out or "BENCH_retrieval.json")
+        return
+
+    if args.mode == "serve":
+        from benchmarks import serve_bench
+        serve_bench.main(args.out or "BENCH_serve.json")
         return
 
     from benchmarks import paper_figures as pf

@@ -1,0 +1,163 @@
+"""Serving throughput sweep: tokens/s vs. active wave size over the
+wave-batched ``RalmEngine`` (one LM dispatch + one retrieval dispatch
+per scheduler wave), with the per-pool step breakdown — LM decode time
+from a blocking timer around ``decode_wave``, retrieval stage times from
+``repro.retrieval.stats``.
+
+Run via ``python -m benchmarks.run --mode serve``; emits
+``BENCH_serve.json`` with one row per wave size. The acceptance claim is
+that tokens/s improves monotonically-or-flat from wave size 1 to the
+max bucket: the whole wave rides one dispatch, so adding rows amortizes
+the per-step dispatch + kernel fixed costs (paper §5, Fig. 9/12 batch
+sweeps).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Sequence
+
+
+class _TimedWave:
+    """Blocking timer around a backend's ``decode_wave`` (the LM-pool
+    side of the per-pool breakdown; retrieval stages come from the
+    service stats, which block per flush the same way)."""
+
+    def __init__(self, backend):
+        self.backend = backend
+        self.times_s: List[float] = []
+        self._orig = backend.decode_wave
+
+    def __enter__(self):
+        def timed(caches, token, slots, position, enc_states=None):
+            import jax
+            t0 = time.perf_counter()
+            out = self._orig(caches, token, slots, position,
+                             enc_states=enc_states)
+            jax.block_until_ready(out[0])
+            self.times_s.append(time.perf_counter() - t0)
+            return out
+        self.backend.decode_wave = timed
+        return self
+
+    def __exit__(self, *exc):
+        self.backend.decode_wave = self._orig
+        return False
+
+
+def _build_engine(kv_slots: int, max_seq: int):
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import transformer as tf
+    from repro.serve import (DatastoreBuilder, RagConfig, RalmEngine,
+                             ServiceConfig)
+
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, 64, size=(64,))
+    seqs = [start]
+    for _ in range(31):
+        seqs.append((3 * seqs[-1] + 1) % 64)
+    corpus = np.stack(seqs, axis=1).astype(np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8,
+                          list_cap=512).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+    rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999,
+                    temperature=1.0)
+    aret = ds.async_retriever(ccfg, service_cfg=ServiceConfig(measure=True))
+    engine = RalmEngine.monolithic(params, cfg, rag, aret,
+                                   max_seq=max_seq, kv_slots=kv_slots)
+    return engine, corpus, aret
+
+
+def run_sweep(wave_sizes: Sequence[int] = (1, 2, 4, 8),
+              steps: int = 48, prompt_len: int = 8,
+              repeats: int = 5) -> List[Dict[str, object]]:
+    """One row per wave size. All points share one engine (and so one
+    fixed pool shape + jit cache); each point submits ``w`` single-row
+    requests decoded in lockstep, best-of-``repeats`` wall clock.
+
+    The timed window is the steady-state decode loop: admission
+    (prefill + the free step-0 token) runs before the clock starts, so
+    tokens/s isolates the wave-batching lever — ``steps - 1`` decode
+    waves over ``w`` rows — from the per-request prefill cost."""
+    import jax.numpy as jnp
+
+    from repro.serve import RalmRequest
+
+    max_wave = max(wave_sizes)
+    engine, corpus, aret = _build_engine(
+        kv_slots=max_wave, max_seq=prompt_len + steps)
+
+    def run_once(w: int) -> float:
+        for i in range(w):
+            engine.submit(RalmRequest(
+                prompt=jnp.asarray(corpus[i:i + 1, :prompt_len]),
+                steps=steps))
+        engine.step()                    # admission + step 0 (untimed)
+        t0 = time.perf_counter()
+        engine.run()
+        return time.perf_counter() - t0
+
+    rows: List[Dict[str, object]] = []
+    for w in wave_sizes:
+        pre_buckets = set(engine.pool.stats.buckets) if engine.pool else set()
+        run_once(w)                      # warmup: compile this bucket
+        best = None
+        for _ in range(repeats):
+            aret.service.stats.reset()
+            base_dispatch = engine.decode_dispatches
+            with _TimedWave(engine.backend) as t:
+                wall = run_once(w)
+            if best is None or wall < best[0]:
+                # keep the retrieval-stage snapshot of the SAME repeat
+                # the wall-clock/LM numbers come from, so each row's
+                # per-pool breakdown is internally consistent
+                best = (wall, engine.decode_dispatches - base_dispatch,
+                        t, aret.service.stats.snapshot())
+        wall, dispatches, timer, snap = best
+        ntok = w * (steps - 1)
+        rows.append(dict(
+            wave=w, steps=steps, prompt_len=prompt_len,
+            tokens_per_s=ntok / wall,
+            us_per_token=wall / ntok * 1e6,
+            wall_s=wall,
+            decode_dispatches=dispatches,
+            lm_step_us=(sum(timer.times_s) / len(timer.times_s) * 1e6
+                        if timer.times_s else 0.0),
+            queue_wait_us=snap["queue_wait"]["mean_us"],
+            scan_us=snap["scan"]["mean_us"],
+            merge_us=snap["merge"]["mean_us"],
+            search_batches=snap["num_batches"],
+            coalescing_factor=snap["coalescing_factor"],
+            # buckets this point compiled/used (pool stats are
+            # cumulative across the sweep, so report the delta)
+            buckets=sorted(set(engine.pool.stats.buckets) - pre_buckets),
+        ))
+    return rows
+
+
+def main(out_path: str = "BENCH_serve.json") -> None:
+    rows = run_sweep()
+    with open(out_path, "w") as f:
+        json.dump(dict(rows=rows), f, indent=2)
+    print("wave,tokens_per_s,lm_step_us,scan_us,merge_us,dispatches")
+    for r in rows:
+        print(f"{r['wave']},{r['tokens_per_s']:.1f},{r['lm_step_us']:.1f},"
+              f"{r['scan_us']:.1f},{r['merge_us']:.1f},"
+              f"{r['decode_dispatches']}")
+    tps = [r["tokens_per_s"] for r in rows]
+    mono = all(b >= a * 0.98 for a, b in zip(tps, tps[1:]))
+    print(f"wrote {out_path} ({len(rows)} rows); "
+          f"monotonic-or-flat: {mono}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    main()

@@ -29,7 +29,14 @@ ap.add_argument("--disaggregate", action="store_true")
 ap.add_argument("--async-retrieval", action="store_true",
                 help="serve searches through a RetrievalService (wave "
                      "coalescing + LRU result cache)")
+ap.add_argument("--per-sequence", action="store_true",
+                help="use the per-sequence oracle decode loop instead of "
+                     "wave-batched decode over the KV-cache pool")
+ap.add_argument("--kv-slots", type=int, default=None,
+                help="fix the KV pool capacity in prompt rows (admission "
+                     "defers when full); default grows on demand")
 args = ap.parse_args()
+wave = not args.per_sequence
 
 # tiny decoder RALM (paper Dec-S family, reduced)
 cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
@@ -67,7 +74,7 @@ if disaggregate:
     engine = RalmEngine.disaggregated(
         params, cfg, rag, ds.params, ds.shards, ccfg,
         payload_tokens=ds.payload_tokens, lm_devices=1,
-        ret_devices=ret_devices)
+        ret_devices=ret_devices, wave=wave, kv_slots=args.kv_slots)
     print(f"disaggregated pools: "
           f"LM={engine.backend.lm_mesh.devices.size} dev, "
           f"retrieval={engine.backend.ret_mesh.devices.size} dev")
@@ -77,10 +84,12 @@ elif args.async_retrieval:
         params, cfg, rag,
         retriever=ds.async_retriever(ccfg,
                                      service_cfg=ServiceConfig(
-                                         cache_entries=1024)))
+                                         cache_entries=1024)),
+        wave=wave, kv_slots=args.kv_slots)
 else:
     engine = RalmEngine.monolithic(params, cfg, rag,
-                                   retriever=ds.retriever(ccfg))
+                                   retriever=ds.retriever(ccfg),
+                                   wave=wave, kv_slots=args.kv_slots)
 
 # two request batches in flight at once: the scheduler pipelines them
 outs = engine.generate_batches([jnp.asarray(corpus[:4, :8]),
@@ -93,6 +102,12 @@ print(f"retrieval-augmented continuation accuracy: {acc:.2f} "
 print("generated :", out[0, 8:16].tolist())
 print("ground tru:", corpus[0, 8:16].tolist())
 
+if engine.pool is not None:   # wave mode: the whole batch rides one dispatch
+    ps = engine.pool.stats
+    print(f"kv pool: {engine.pool.capacity} slots "
+          f"(high water {ps.high_water}), {ps.waves} waves of "
+          f"{ps.mean_wave():.1f} rows avg in {engine.decode_dispatches} "
+          f"LM dispatches, buckets {sorted(ps.buckets)}")
 service = getattr(engine.retriever, "service", None)
 if service is not None:   # async path only (--disaggregate has no service)
     st = service.stats

@@ -47,6 +47,19 @@ class ChamVSConfig:
     interpret: bool = True        # Pallas interpret mode (CPU container)
     num_l1_blocks: int = 16       # producers per shard for the approx queue
 
+    def with_kernel(self, backend: Optional[str] = None,
+                    interpret: Optional[bool] = None) -> "ChamVSConfig":
+        """Return a copy with the kernel selection overridden (``None``
+        keeps the current value) — the one place the EngineConfig /
+        ServiceConfig ``kernel_backend`` / ``kernel_interpret`` knobs
+        are folded in."""
+        if backend is None and interpret is None:
+            return self
+        return dataclasses.replace(
+            self,
+            backend=backend if backend is not None else self.backend,
+            interpret=interpret if interpret is not None else self.interpret)
+
     def k_prime(self, num_shards: int) -> int:
         """Truncated per-shard queue length (paper §4.2.2): the shards are the
         level-one producers of the global top-K, so each only ships k' << K

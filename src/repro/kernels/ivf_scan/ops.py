@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple
 
 import jax
@@ -9,6 +10,28 @@ import jax.numpy as jnp
 
 from repro.kernels.ivf_scan import kernel as _k
 from repro.kernels.ivf_scan import ref as _ref
+
+# Below this many IVF lists the Pallas kernel cannot tile profitably
+# (tile_c would degenerate to the whole centroid table and the grid to a
+# single program), so ``backend="pallas"`` transparently routes to the
+# reference scan. Benchmarks that sweep tiny indexes must know their
+# "pallas" numbers are really ref numbers — hence the one-time warning.
+PALLAS_MIN_NLIST = 128
+
+_pallas_fallback_warned = False
+
+
+def _warn_pallas_fallback(nlist: int) -> None:
+    global _pallas_fallback_warned
+    if _pallas_fallback_warned:
+        return
+    _pallas_fallback_warned = True
+    warnings.warn(
+        f"ivf_index_scan: backend='pallas' requested but nlist={nlist} < "
+        f"PALLAS_MIN_NLIST={PALLAS_MIN_NLIST}; falling back to the "
+        "reference scan (benchmark numbers for this index size are NOT "
+        "Pallas numbers). This warning is emitted once per process.",
+        RuntimeWarning, stacklevel=3)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "backend", "interpret"))
@@ -20,9 +43,12 @@ def ivf_index_scan(queries: jnp.ndarray, centroids: jnp.ndarray, nprobe: int,
     queries [nq, D], centroids [nlist, D] -> (dists, list_ids) [nq, nprobe]."""
     nq = queries.shape[0]
     nlist = centroids.shape[0]
-    if backend == "ref" or nlist < 128:
+    if backend == "ref":
         return _ref.ref_ivf_scan(queries, centroids, nprobe)
     if backend == "pallas":
+        if nlist < PALLAS_MIN_NLIST:
+            _warn_pallas_fallback(nlist)
+            return _ref.ref_ivf_scan(queries, centroids, nprobe)
         tile_q = 8 if nq % 8 == 0 else (4 if nq % 4 == 0 else 1)
         tile_c = 512 if nlist % 512 == 0 else (128 if nlist % 128 == 0 else nlist)
         return _k.ivf_scan(queries, centroids, nprobe,

@@ -51,6 +51,19 @@ def main() -> None:
                     help="drop the per-flush stage-timing host blocks "
                          "(maximum decode/search overlap; the stats line "
                          "then reports counters only)")
+    ap.add_argument("--per-sequence", action="store_true",
+                    help="per-sequence oracle decode (one LM dispatch per "
+                         "sequence) instead of wave-batched decode over "
+                         "the KV-cache pool")
+    ap.add_argument("--kv-slots", type=int, default=None,
+                    help="fix the KV pool capacity in prompt rows; "
+                         "default grows on demand")
+    ap.add_argument("--kernel-backend", choices=["ref", "pallas"],
+                    default=None,
+                    help="override the ChamVS scan kernel backend")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run Pallas kernels compiled instead of in "
+                         "interpret mode (needs a real accelerator)")
     args = ap.parse_args()
 
     from repro.models import transformer as tf
@@ -70,7 +83,12 @@ def main() -> None:
                            lm_devices=1, ret_devices=ret_devices,
                            async_retrieval=args.async_retrieval,
                            retrieval_cache=args.retrieval_cache,
-                           retrieval_measure=not args.no_retrieval_measure)
+                           retrieval_measure=not args.no_retrieval_measure,
+                           wave_decode=not args.per_sequence,
+                           kv_slots=args.kv_slots,
+                           kernel_backend=args.kernel_backend,
+                           kernel_interpret=(False if args.no_interpret
+                                             else None))
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -94,6 +112,12 @@ def main() -> None:
         line += (f"; optimal LM:retrieval ratio estimate "
                  f"{engine.times.optimal_ratio():.2f}")
     print(line)
+    if engine.pool is not None:
+        ps = engine.pool.stats
+        print(f"[serve] kv pool: {engine.pool.capacity} slots "
+              f"(high water {ps.high_water}), {ps.waves} waves avg "
+              f"{ps.mean_wave():.1f} rows -> {engine.decode_dispatches} "
+              f"LM dispatches, buckets {sorted(ps.buckets)}")
     service = getattr(engine.retriever, "service", None)
     if service is not None:
         st = service.stats

@@ -278,6 +278,11 @@ def decode_attention(q, k_cache, v_cache, position, window=0,
                      ring: bool = False):
     """One-token decode. q [B,1,H,D]; caches [B,S,KV,D]; position [B] int32.
 
+    The batch rows are independent: ``position`` is per-row, and every row
+    attends only over its own valid prefix (invalid slots are masked to
+    exactly zero weight). This is what lets a wave of pooled cache slots
+    with ragged lengths decode as one batch (``transformer.decode_wave``).
+
     ``ring=True`` means the cache is a sliding ring buffer of size S=window:
     slot i holds absolute position p_i = pos - ((pos - i) mod S); otherwise
     slot i holds absolute position i and validity is i <= pos."""
@@ -333,21 +338,29 @@ def prefill_cache(k_cache, v_cache, k_new, v_new, ring: bool = False):
     return (jnp.roll(tail_k, shift, axis=1), jnp.roll(tail_v, shift, axis=1))
 
 
-def update_cache(k_cache, v_cache, k_new, v_new, position, ring: bool = False):
+def update_cache(k_cache, v_cache, k_new, v_new, position, ring: bool = False,
+                 slots=None):
     """Write [B,Tn,KV,D] new keys/values at `position` (scalar int or [B]).
 
     Full cache: slot = position + t. Ring cache: slot = (position + t) % S.
     Scatter form: with donated caches XLA performs the update in place, so
     per-step HBM traffic is O(written slots), not O(cache) — this is what
-    keeps the decode memory-roofline term parameter-dominated."""
-    B, S, KV, D = k_cache.shape
-    Tn = k_new.shape[1]
+    keeps the decode memory-roofline term parameter-dominated.
+
+    ``slots`` is the batched-slot path (KV-cache pool): the caches hold
+    ``P`` pooled rows while ``k_new``/``v_new`` carry one wave of ``W``
+    active rows; row ``w`` of the wave is written into pool row
+    ``slots[w]``. Without ``slots`` the wave and the cache batch dims
+    coincide (the classic per-sequence layout)."""
+    S = k_cache.shape[1]
+    B, Tn = k_new.shape[:2]
     pos = jnp.broadcast_to(jnp.asarray(position), (B,))
     t = jnp.arange(Tn)
-    slots = pos[:, None] + t[None, :]                         # [B,Tn]
+    seq_idx = pos[:, None] + t[None, :]                       # [B,Tn]
     if ring:
-        slots = slots % S
-    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Tn))
-    k_cache = k_cache.at[bidx, slots].set(k_new.astype(k_cache.dtype))
-    v_cache = v_cache.at[bidx, slots].set(v_new.astype(v_cache.dtype))
+        seq_idx = seq_idx % S
+    rows = jnp.arange(B) if slots is None else jnp.asarray(slots)
+    bidx = jnp.broadcast_to(rows[:, None], (B, Tn))
+    k_cache = k_cache.at[bidx, seq_idx].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, seq_idx].set(v_new.astype(v_cache.dtype))
     return k_cache, v_cache

@@ -189,8 +189,13 @@ def _proj_qkv(cfg, p, x):
     return q, k, v
 
 
-def _self_attention(cfg, p, h, positions, mode, cache, window):
-    """Returns (attn_out [B,T,d], new_cache)."""
+def _self_attention(cfg, p, h, positions, mode, cache, window, slots=None):
+    """Returns (attn_out [B,T,d], new_cache).
+
+    ``slots`` enables the batched-slot (KV-pool) decode path: the cache
+    carries ``P`` pooled rows, ``h`` carries a wave of ``W`` active rows,
+    and row ``w`` reads/writes pool row ``slots[w]``. New K/V are written
+    at O(W) scatter cost; attention reads gather each wave row's slot."""
     B, T, _ = h.shape
     q, k, v = _proj_qkv(cfg, p, h)
     pos1d = positions[0] if positions.ndim == 3 else positions
@@ -200,8 +205,10 @@ def _self_attention(cfg, p, h, positions, mode, cache, window):
     new_cache = cache
     if mode == "decode":
         kc, vc = update_cache(cache["k"], cache["v"], k, v,
-                              pos1d[:, 0], ring=ring)
-        out = decode_attention(q, kc, vc, pos1d[:, 0], window=window,
+                              pos1d[:, 0], ring=ring, slots=slots)
+        k_att = kc if slots is None else kc[slots]
+        v_att = vc if slots is None else vc[slots]
+        out = decode_attention(q, k_att, v_att, pos1d[:, 0], window=window,
                                ring=ring)
         new_cache = dict(cache, k=kc, v=vc)
     else:
@@ -215,13 +222,15 @@ def _self_attention(cfg, p, h, positions, mode, cache, window):
     return out @ p["wo"], new_cache
 
 
-def _cross_attention(cfg, p, h, enc_states, mode, cache):
+def _cross_attention(cfg, p, h, enc_states, mode, cache, slots=None):
     """Decoder cross-attention over encoder states (RETRO/EncDec path)."""
     B, T, _ = h.shape
     hn = rms_norm(h, p["lnx"], cfg.norm_eps)
     q = (hn @ p["xwq"]).reshape(B, T, cfg.n_heads, cfg.d_head)
     if mode == "decode" and cache is not None and "xk" in cache:
         xk, xv = cache["xk"], cache["xv"]
+        if slots is not None:           # pooled cross-KV: gather wave rows
+            xk, xv = xk[slots], xv[slots]
     else:
         S = enc_states.shape[1]
         xk = (enc_states @ p["xwk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
@@ -250,45 +259,69 @@ def _ffn(cfg, p, x):
 
 def apply_block(cfg: ModelConfig, p: Params, h: jnp.ndarray,
                 positions: jnp.ndarray, mode: str, cache: Optional[Params],
-                window: int, enc_states=None):
-    """One layer. Returns (h, new_cache)."""
+                window: int, enc_states=None, slots=None):
+    """One layer. Returns (h, new_cache).
+
+    With ``slots`` (batched-slot decode over a KV-cache pool) the cache
+    leaves keep their pooled batch dim ``P``; recurrent states (SSM /
+    conv / RWKV) are gathered to the wave rows for the step and scattered
+    back, while attention K/V use the O(W)-write path in
+    ``_self_attention``."""
     if cfg.block == "rwkv6":
         rp = ssm_lib.RWKV6Params(**{f: p[f] for f in
                                     ssm_lib.RWKV6Params._fields})
-        st = ssm_lib.RWKVState(wkv=cache["wkv"], shift_t=cache["st"],
-                               shift_c=cache["sc"]) if cache is not None else \
-            ssm_lib.rwkv6_init_state(h.shape[0], cfg.n_heads, cfg.d_head,
-                                     cfg.d_model, h.dtype)
+        if cache is not None:
+            c = cache if slots is None else jax.tree.map(
+                lambda a: a[slots], cache)
+            st = ssm_lib.RWKVState(wkv=c["wkv"], shift_t=c["st"],
+                                   shift_c=c["sc"])
+        else:
+            st = ssm_lib.rwkv6_init_state(h.shape[0], cfg.n_heads,
+                                          cfg.d_head, cfg.d_model, h.dtype)
         y, wkv, sh_t = ssm_lib.rwkv6_time_mix_chunked(
             rp, rms_norm(h, p["ln1"], cfg.norm_eps), st, cfg.n_heads)
         h = h + y
         y2, sh_c = ssm_lib.rwkv6_channel_mix(
             rp, rms_norm(h, p["ln2"], cfg.norm_eps), st.shift_c)
         h = h + y2
-        new_cache = (dict(wkv=wkv, st=sh_t, sc=sh_c)
-                     if cache is not None else None)
-        return h, new_cache
+        if cache is None:
+            return h, None
+        rows = dict(wkv=wkv, st=sh_t, sc=sh_c)
+        if slots is None:
+            return h, rows
+        return h, {key: cache[key].at[slots].set(
+            rows[key].astype(cache[key].dtype)) for key in rows}
 
     hn = rms_norm(h, p["ln1"], cfg.norm_eps)
     attn_out, new_cache = _self_attention(cfg, p, hn, positions, mode,
                                           cache if cache is not None else
-                                          dict(k=None, v=None), window)
+                                          dict(k=None, v=None), window,
+                                          slots=slots)
     if cache is None:
         new_cache = None
     if cfg.block == "hybrid":
         mp = jax.tree.map(lambda x: x, p["mamba"])
-        sstate = ((cache["ssm"], cache["conv"])
-                  if cache is not None else None)
+        sstate = None
+        if cache is not None:
+            sstate = ((cache["ssm"], cache["conv"]) if slots is None
+                      else (cache["ssm"][slots], cache["conv"][slots]))
         ssm_out, (ssm_s, conv_s) = ssm_lib.mamba_scan(mp, hn, sstate)
         attn_out = 0.5 * (rms_norm(attn_out, p["ln_attn_out"], cfg.norm_eps)
                           + rms_norm(ssm_out, p["ln_ssm_out"], cfg.norm_eps))
         if cache is not None:
-            new_cache = dict(new_cache, ssm=ssm_s,
-                             conv=conv_s.astype(cache["conv"].dtype))
+            if slots is None:
+                new_cache = dict(new_cache, ssm=ssm_s,
+                                 conv=conv_s.astype(cache["conv"].dtype))
+            else:
+                new_cache = dict(
+                    new_cache,
+                    ssm=cache["ssm"].at[slots].set(ssm_s),
+                    conv=cache["conv"].at[slots].set(
+                        conv_s.astype(cache["conv"].dtype)))
     h = h + attn_out
     if enc_states is not None and "xwq" in p:
         h, new_cache = _cross_attention(cfg, p, h, enc_states, mode,
-                                        new_cache)
+                                        new_cache, slots=slots)
     h = h + _ffn(cfg, p, rms_norm(h, p["ln2"], cfg.norm_eps))
     return h, new_cache
 
@@ -300,9 +333,14 @@ def apply_block(cfg: ModelConfig, p: Params, h: jnp.ndarray,
 def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
                 positions: jnp.ndarray, mode: str,
                 caches: Optional[Params] = None, enc_states=None,
-                remat: bool = False) -> Tuple[jnp.ndarray, Optional[Params]]:
+                remat: bool = False, slots=None
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Apply all n_layers in order. Layers are grouped by the static
-    ``layer_pattern`` cycle; a lax.scan over whole cycles keeps HLO small."""
+    ``layer_pattern`` cycle; a lax.scan over whole cycles keeps HLO small.
+
+    ``slots`` (decode only): the caches are a KV-cache pool of ``P`` slot
+    rows while ``h`` is one wave of ``W`` active rows — see
+    ``decode_wave``. The scan carry stays pool-shaped throughout."""
     pattern = cfg.layer_pattern
     period = len(pattern)
     n_full, tail = divmod(cfg.n_layers, period)
@@ -332,7 +370,7 @@ def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
             cache = (jax.tree.map(lambda a: a[idx], caches_["classes"][cls])
                      if caches_ is not None else None)
             h, new_cache = apply_block(cfg, p, h, positions, mode, cache,
-                                       window, enc_states)
+                                       window, enc_states, slots=slots)
             if caches_ is not None:
                 upd = jax.tree.map(
                     lambda a, nc: jax.lax.dynamic_update_index_in_dim(
@@ -354,7 +392,7 @@ def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
         cache = (jax.tree.map(lambda a: a[idx], caches["classes"][cls])
                  if caches is not None else None)
         h, new_cache = apply_block(cfg, p, h, positions, mode, cache, window,
-                                   enc_states)
+                                   enc_states, slots=slots)
         if caches is not None:
             upd = jax.tree.map(
                 lambda a, nc: jax.lax.dynamic_update_index_in_dim(
@@ -422,7 +460,7 @@ def forward(params: Params, cfg: ModelConfig,
             mode: str = "train",
             caches: Optional[Params] = None,
             enc_states: Optional[jnp.ndarray] = None,
-            remat: bool = False, return_hidden: bool = False):
+            remat: bool = False, return_hidden: bool = False, slots=None):
     """Full forward. Provide `tokens` [B,T] or `embeds` [B,T,d] (modality
     stubs). Returns (logits [B,T,V], caches[, hidden])."""
     h = embed_tokens(params, tokens) if embeds is None else embeds
@@ -431,7 +469,7 @@ def forward(params: Params, cfg: ModelConfig,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
     h, caches = apply_stack(cfg, params["classes"], h, positions, mode,
-                            caches, enc_states, remat=remat)
+                            caches, enc_states, remat=remat, slots=slots)
     h = constrain(h, "dp", None, None)
     logits = unembed(params, cfg, h)
     if return_hidden:
@@ -452,6 +490,37 @@ def decode_step(params: Params, cfg: ModelConfig, caches: Params,
         pos = jnp.broadcast_to(pos[None], (3, B, 1))
     out = forward(params, cfg, tokens=token, positions=pos, mode="decode",
                   caches=caches, enc_states=enc_states,
+                  return_hidden=return_hidden)
+    if return_hidden:
+        logits, caches, h = out
+        return logits[:, 0], caches, h[:, 0]
+    logits, caches = out
+    return logits[:, 0], caches
+
+
+def decode_wave(params: Params, cfg: ModelConfig, caches: Params,
+                token: jnp.ndarray, slots: jnp.ndarray,
+                position: jnp.ndarray,
+                enc_states: Optional[jnp.ndarray] = None,
+                return_hidden: bool = False):
+    """One serving step for a whole wave over a slotted KV-cache pool.
+
+    ``caches`` hold ``P`` pooled slot rows (built with
+    ``init_cache(cfg, P, ...)``); ``token`` [W,1] / ``slots`` [W] /
+    ``position`` [W] describe the wave: row ``w`` advances the sequence
+    living in pool slot ``slots[w]`` at absolute position ``position[w]``.
+    ``enc_states`` (encdec) is already gathered to wave rows [W, S, d].
+
+    Returns (logits [W,V], new pool caches[, hidden [W,d]]). One call =
+    one LM dispatch for every active sequence, regardless of how many
+    requests the wave spans — the ChamLM analogue of the retrieval
+    service's coalesced batch (paper §5 batched GPU pool)."""
+    W = token.shape[0]
+    pos = position[:, None]
+    if cfg.rope_mode == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, W, 1))
+    out = forward(params, cfg, tokens=token, positions=pos, mode="decode",
+                  caches=caches, enc_states=enc_states, slots=slots,
                   return_hidden=return_hidden)
     if return_hidden:
         logits, caches, h = out

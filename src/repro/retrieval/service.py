@@ -63,6 +63,20 @@ class ServiceConfig:
     #                               >= 2 = hierarchical tree merge
     measure: bool = True          # block per stage to record scan/merge
     #                               times (off = maximum async overlap)
+    kernel_backend: Optional[str] = None  # override ChamVSConfig.backend
+    #                               ("ref" | "pallas") so serving configs
+    #                               can select the Pallas scan path
+    kernel_interpret: Optional[bool] = None  # override ChamVSConfig.
+    #                               interpret (Pallas interpret mode)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n — the shape-bucketing unit shared by
+    the query micro-batcher here and the serve KV pool's wave buckets."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +218,14 @@ class RetrievalService:
     def local(cls, params: IVFPQParams, shards: List[IVFPQShard],
               cfg: ChamVSConfig, config: Optional[ServiceConfig] = None
               ) -> "RetrievalService":
-        """Single-process service (tests, builds, monolithic serving)."""
+        """Single-process service (tests, builds, monolithic serving).
+        ``ServiceConfig.kernel_backend`` / ``kernel_interpret`` override
+        the corresponding ``ChamVSConfig`` fields, so a deployment config
+        can select the Pallas scan path without rebuilding the search
+        config by hand."""
+        if config is not None:
+            cfg = cfg.with_kernel(config.kernel_backend,
+                                  config.kernel_interpret)
         return cls(LocalPipeline(params, shards, cfg), config=config)
 
     @classmethod
@@ -212,7 +233,17 @@ class RetrievalService:
                     shards: List[IVFPQShard],
                     config: Optional[ServiceConfig] = None
                     ) -> "RetrievalService":
-        """Service over a retrieval mesh (one memory node per device)."""
+        """Service over a retrieval mesh (one memory node per device).
+        The kernel config is baked into the router at construction, so
+        ``ServiceConfig`` kernel overrides cannot apply here — reject
+        them loudly rather than silently serving ref-scan numbers."""
+        if config is not None and (config.kernel_backend is not None or
+                                   config.kernel_interpret is not None):
+            raise ValueError(
+                "ServiceConfig.kernel_backend/kernel_interpret cannot "
+                "override a distributed pipeline — the ShardRouter owns "
+                "its ChamVSConfig; build the router with "
+                "cfg.with_kernel(...) instead")
         return cls(RouterPipeline(router, params, shards), config=config)
 
     # -- the in-flight request table ---------------------------------------
@@ -276,11 +307,7 @@ class RetrievalService:
     # -- the batched dispatch ----------------------------------------------
 
     def _bucket(self, n: int) -> int:
-        b = n
-        if self.config.bucket_pow2:
-            b = 1
-            while b < n:
-                b *= 2
+        b = next_pow2(n) if self.config.bucket_pow2 else n
         # distributed pipelines query-split over the TP columns, which
         # requires the row count to divide evenly
         mult = getattr(self.pipeline, "row_multiple", 1)

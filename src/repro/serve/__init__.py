@@ -22,13 +22,14 @@ from repro.serve.api import (AsyncRetriever, DistributedRetriever,
 from repro.serve.datastore import Datastore, DatastoreBuilder
 from repro.serve.engine import (DisaggregatedBackend, MonolithicBackend,
                                 PoolTimes, RalmEngine, SequenceState)
+from repro.serve.kvpool import KVCachePool, PoolStats
 from repro.serve.scheduler import RalmScheduler
 
 __all__ = [
     "AsyncRetriever", "Datastore", "DatastoreBuilder",
     "DisaggregatedBackend", "DistributedRetriever", "EngineConfig",
-    "LocalRetriever", "MonolithicBackend", "PoolTimes", "RagConfig",
-    "RalmEngine", "RalmRequest", "RalmResponse", "RalmScheduler",
-    "RetrievalService", "Retriever", "SearchHandle", "SequenceState",
-    "ServiceConfig",
+    "KVCachePool", "LocalRetriever", "MonolithicBackend", "PoolStats",
+    "PoolTimes", "RagConfig", "RalmEngine", "RalmRequest", "RalmResponse",
+    "RalmScheduler", "RetrievalService", "Retriever", "SearchHandle",
+    "SequenceState", "ServiceConfig",
 ]

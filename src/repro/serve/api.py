@@ -91,6 +91,18 @@ class EngineConfig:
     retrieval_measure: bool = True       # per-stage service timings; False
     #                                      drops the per-flush host blocks
     #                                      for maximum decode/search overlap
+    wave_decode: bool = True             # one LM dispatch per wave over a
+    #                                      slotted KVCachePool; False keeps
+    #                                      the per-sequence oracle loop
+    kv_slots: Optional[int] = None       # KV pool capacity in prompt rows;
+    #                                      None = grow on demand, fixed
+    #                                      values defer admission until
+    #                                      completions free slots
+    kernel_backend: Optional[str] = None  # override ChamVSConfig.backend
+    #                                      ("ref" | "pallas") from the
+    #                                      deployment config
+    kernel_interpret: Optional[bool] = None  # override Pallas interpret
+    #                                      mode (CPU containers need True)
 
 
 # ---------------------------------------------------------------------------

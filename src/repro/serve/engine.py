@@ -17,6 +17,16 @@ Backends own the decode side of the boundary:
     retrieval pool with independent meshes, plus ``PoolTimes`` measuring
     the per-pool step times that give the Fig. 13 optimal-ratio estimate.
 
+Decode has two shapes. The default (``wave=True``) runs over a
+``KVCachePool``: every active sequence's rows live in pooled cache
+slots, and ``decode_wave`` advances the whole wave as ONE dispatch
+(``tokens [W], slots [W], positions [W]``, W bucketed to powers of two
+like the retrieval service's query batches). kNN interpolation and
+greedy sampling batch the same way. The per-sequence path
+(``wave=False``) is kept as the parity oracle — greedy outputs must be
+token-identical between the two, including staggered admission and
+ragged prompt lengths (tests/test_kvpool.py).
+
 Retrieval is any object satisfying ``api.Retriever``; the engine never
 looks past ``search``/``resolve``.
 
@@ -47,6 +57,7 @@ from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.serve.api import (DistributedRetriever, EngineConfig,
                              RalmRequest, RalmResponse, Retriever)
+from repro.serve.kvpool import KVCachePool, next_pow2
 from repro.serve.scheduler import RalmScheduler
 
 
@@ -101,6 +112,17 @@ def _jit_decode(params, cfg: ModelConfig, caches, token, position,
                           enc_states=enc_states, return_hidden=True)
 
 
+@functools.partial(jax.jit, static_argnums=1, donate_argnums=(2,))
+def _jit_decode_wave(params, cfg: ModelConfig, caches, token, slots,
+                     position, enc_states):
+    """One dispatch per wave over the slotted KV-cache pool. The pool
+    caches are donated: the per-layer K/V writes land in place, so step
+    cost is O(wave), not O(pool). Shared jit cache across engines, keyed
+    on (cfg, wave bucket, pool shape)."""
+    return tf.decode_wave(params, cfg, caches, token, slots, position,
+                          enc_states=enc_states, return_hidden=True)
+
+
 class MonolithicBackend:
     """Decode on the default device set — LM and retrieval share
     hardware. No per-step blocking, so jax's async dispatch pipelines."""
@@ -110,13 +132,21 @@ class MonolithicBackend:
 
     def __init__(self, params, cfg: ModelConfig):
         self.params, self.cfg = params, cfg
+        self.decode_dispatches = 0      # LM dispatch counter (tests/bench)
 
     def prefill(self, rag: RagConfig, prompt: jnp.ndarray, max_seq: int):
         return _prefill(self.params, self.cfg, rag, prompt, max_seq)
 
     def decode(self, caches, token, position, enc_states=None):
+        self.decode_dispatches += 1
         return _jit_decode(self.params, self.cfg, caches, token, position,
                            enc_states)
+
+    def decode_wave(self, caches, token, slots, position, enc_states=None):
+        """Advance one wave of pooled slots: token/slots/position [W]."""
+        self.decode_dispatches += 1
+        return _jit_decode_wave(self.params, self.cfg, caches, token,
+                                slots, position, enc_states)
 
     def encode_chunks(self, chunks: jnp.ndarray) -> jnp.ndarray:
         """RETRO re-encode of retrieved chunk tokens [B, L] — LM-side
@@ -144,6 +174,7 @@ class DisaggregatedBackend:
         assert lm_devices + ret_devices <= len(devs), (
             lm_devices, ret_devices, len(devs))
         self.params, self.cfg = params, cfg
+        self.decode_dispatches = 0
         self.times = PoolTimes() if measure else None
         # LM pool: pure data-parallel decode (each unit = one "GPU process")
         self.lm_mesh = make_mesh_for(devs[:lm_devices], data=lm_devices)
@@ -156,10 +187,25 @@ class DisaggregatedBackend:
             return _prefill(self.params, self.cfg, rag, prompt, max_seq)
 
     def decode(self, caches, token, position, enc_states=None):
+        self.decode_dispatches += 1
         t0 = time.time()
         with use_mesh(self.lm_mesh):
             logits, caches, hidden = _jit_decode(
                 self.params, self.cfg, caches, token, position, enc_states)
+        if self.times is not None:
+            logits.block_until_ready()
+            self.times.decode_s.append(time.time() - t0)
+        return logits, caches, hidden
+
+    def decode_wave(self, caches, token, slots, position, enc_states=None):
+        """One LM-pool dispatch for the whole wave (paper §5: the GPU
+        pool batches inference across requests)."""
+        self.decode_dispatches += 1
+        t0 = time.time()
+        with use_mesh(self.lm_mesh):
+            logits, caches, hidden = _jit_decode_wave(
+                self.params, self.cfg, caches, token, slots, position,
+                enc_states)
         if self.times is not None:
             logits.block_until_ready()
             self.times.decode_s.append(time.time() - t0)
@@ -179,7 +225,11 @@ class DisaggregatedBackend:
 
 @dataclasses.dataclass
 class SequenceState:
-    """One active request's decode state (owned by the scheduler)."""
+    """One active request's decode state (owned by the scheduler).
+
+    Wave mode: ``caches``/``enc_states`` are ``None`` — the KV lives in
+    the engine's ``KVCachePool`` at rows ``slots`` (one per prompt row),
+    claimed at admission and freed at completion."""
     request: RalmRequest
     caches: Any
     enc_states: Optional[jnp.ndarray]
@@ -190,6 +240,7 @@ class SequenceState:
     hidden0: Optional[jnp.ndarray]       # prefill hidden  (step-0 query)
     rng: Optional[jax.Array]
     step: int = 0
+    slots: Optional[np.ndarray] = None   # pool rows (wave mode)
 
     @property
     def done(self) -> bool:
@@ -207,24 +258,51 @@ class RalmEngine:
     def __init__(self, backend, retriever: Optional[Retriever] = None,
                  rag: Optional[RagConfig] = None,
                  max_seq: Optional[int] = None,
-                 max_active: Optional[int] = None):
+                 max_active: Optional[int] = None,
+                 wave: bool = True, kv_slots: Optional[int] = None):
+        """``wave=True`` (default) decodes every active sequence in one
+        dispatch per scheduler wave over a slotted ``KVCachePool``;
+        ``wave=False`` keeps the per-sequence oracle loop (one dispatch
+        per sequence, private caches). ``kv_slots`` fixes the pool
+        capacity in rows — admission then defers until completions free
+        slots; ``None`` lets the pool grow on demand."""
         self.backend = backend
         self.retriever = retriever
         self.rag = rag if rag is not None else RagConfig(mode="none")
         self.cfg = backend.cfg
+        if wave and self.rag.mode == "retro" and \
+                self.cfg.arch == "encdec" and \
+                self.rag.k * self.rag.chunk_len < 8:
+            # the pooled enc buffer needs one width for all slots, but
+            # prefill's neutral encoder floor is 8 tokens while re-encode
+            # rows would be k*chunk_len wide — fail at construction, not
+            # mid-generation inside write_enc
+            raise ValueError(
+                f"wave decode needs rag.k * rag.chunk_len >= 8 for RETRO "
+                f"(got {self.rag.k} * {self.rag.chunk_len}); use "
+                "wave=False for this config")
         self.max_seq = max_seq
+        self.wave = wave
+        self.kv_slots = kv_slots
+        self.pool: Optional[KVCachePool] = None   # built at first admission
         self.times: Optional[PoolTimes] = getattr(backend, "times", None)
         self.scheduler = RalmScheduler(self, max_active=max_active)
         self._unclaimed: List[RalmResponse] = []
+
+    @property
+    def decode_dispatches(self) -> int:
+        """LM dispatches issued so far (wave mode: one per wave)."""
+        return self.backend.decode_dispatches
 
     # -- constructors -------------------------------------------------------
 
     @classmethod
     def monolithic(cls, params, cfg: ModelConfig, rag: RagConfig,
                    retriever: Optional[Retriever] = None,
-                   max_seq: Optional[int] = None) -> "RalmEngine":
+                   max_seq: Optional[int] = None, wave: bool = True,
+                   kv_slots: Optional[int] = None) -> "RalmEngine":
         return cls(MonolithicBackend(params, cfg), retriever, rag,
-                   max_seq=max_seq)
+                   max_seq=max_seq, wave=wave, kv_slots=kv_slots)
 
     @classmethod
     def disaggregated(cls, params, cfg: ModelConfig, rag: RagConfig,
@@ -235,7 +313,8 @@ class RalmEngine:
                       lm_devices: int = 1, ret_devices: int = 1,
                       query_proj: Optional[jnp.ndarray] = None,
                       max_seq: Optional[int] = None,
-                      measure: bool = True) -> "RalmEngine":
+                      measure: bool = True, wave: bool = True,
+                      kv_slots: Optional[int] = None) -> "RalmEngine":
         backend = DisaggregatedBackend(params, cfg, lm_devices=lm_devices,
                                        ret_devices=ret_devices,
                                        measure=measure)
@@ -243,7 +322,8 @@ class RalmEngine:
             backend.ret_mesh, db_params, db_shards, search_cfg,
             payload_tokens=payload_tokens, chunk_table=chunk_table,
             query_proj=query_proj)
-        return cls(backend, retriever, rag, max_seq=max_seq)
+        return cls(backend, retriever, rag, max_seq=max_seq, wave=wave,
+                   kv_slots=kv_slots)
 
     @classmethod
     def from_config(cls, config: EngineConfig, params, datastore,
@@ -254,6 +334,10 @@ class RalmEngine:
         ``Datastore`` (see ``repro.serve.datastore``). Falls back to a
         monolithic engine (with a warning) when ``disaggregate`` is
         requested on a single-device host."""
+        # plumb the search-kernel selection (Pallas vs ref, interpret
+        # mode) from the deployment config down to ChamVSConfig
+        search_cfg = search_cfg.with_kernel(config.kernel_backend,
+                                            config.kernel_interpret)
         if config.disaggregate and len(jax.devices()) < 2:
             import warnings
             warnings.warn(
@@ -277,7 +361,8 @@ class RalmEngine:
                 chunk_table=datastore.chunk_table,
                 lm_devices=config.lm_devices,
                 ret_devices=config.ret_devices, query_proj=query_proj,
-                max_seq=config.max_seq)
+                max_seq=config.max_seq, wave=config.wave_decode,
+                kv_slots=config.kv_slots)
         else:
             if config.retrieval_cache > 0 and not config.async_retrieval:
                 import warnings
@@ -298,15 +383,79 @@ class RalmEngine:
                                                 query_proj=query_proj)
             eng = cls.monolithic(params, config.model, config.rag,
                                  retriever=retriever,
-                                 max_seq=config.max_seq)
+                                 max_seq=config.max_seq,
+                                 wave=config.wave_decode,
+                                 kv_slots=config.kv_slots)
         eng.scheduler.max_active = config.max_active
         return eng
+
+    # -- KV-cache pool admission (wave mode) --------------------------------
+
+    def check_admissible(self, request: RalmRequest) -> None:
+        """Reject-at-submit guard: a request that can NEVER fit the
+        fixed-capacity pool must fail in ``submit()``, not poison the
+        FIFO queue for everyone behind it when ``_admit`` reaches it."""
+        if self.wave and self.kv_slots is not None and \
+                request.prompt.shape[0] > self.kv_slots:
+            raise ValueError(
+                f"request batch of {request.prompt.shape[0]} rows can "
+                f"never fit kv_slots={self.kv_slots}")
+
+    def can_admit(self, request: RalmRequest) -> bool:
+        """Admission check the scheduler consults before ``start``: a
+        fixed-capacity pool defers requests until completions free
+        enough slot rows (an auto-growing pool admits everything)."""
+        if not self.wave or self.kv_slots is None:
+            return True
+        B = request.prompt.shape[0]
+        return self.pool is None or self.pool.num_free >= B
+
+    def _ensure_pool(self, rows: int, need_seq: int) -> KVCachePool:
+        """Create the pool lazily (shapes depend on the first admitted
+        request unless ``max_seq``/``kv_slots`` pin them) and grow it —
+        slot rows double, the sequence axis extends — when an admission
+        needs more than it has."""
+        if self.pool is None:
+            cap = (self.kv_slots if self.kv_slots is not None
+                   else max(next_pow2(rows), 8))
+            self.pool = KVCachePool(self.cfg, cap,
+                                    self.max_seq or need_seq,
+                                    fixed=self.kv_slots is not None)
+        pool = self.pool
+        if self.max_seq is None and need_seq > pool.max_seq:
+            pool.grow_seq(need_seq)
+        if pool.num_free < rows:
+            pool.grow_slots(max(pool.capacity * 2,
+                                next_pow2(pool.num_used + rows)))
+        return pool
+
+    def release(self, seq: SequenceState) -> None:
+        """Return a finished sequence's slot rows to the pool."""
+        if seq.slots is not None and self.pool is not None:
+            self.pool.release(seq.slots)
+            seq.slots = None
 
     # -- the canonical step (called by the scheduler) -----------------------
 
     def start(self, request: RalmRequest) -> SequenceState:
-        """Prefill a request into an active sequence."""
+        """Prefill a request into an active sequence. Wave mode: claim
+        one pool slot per prompt row, prefill at the pool's ``max_seq``
+        (so cache leaves line up slot-for-slot) and scatter the rows in;
+        the request itself holds no cache."""
         B, T0 = request.prompt.shape
+        if self.wave:
+            pool = self._ensure_pool(B, T0 + request.steps)
+            slots = pool.alloc(B)
+            caches, enc_states, logits0, hidden0 = self.backend.prefill(
+                self.rag, request.prompt, pool.max_seq)
+            pool.write_prefill(slots, caches)
+            if enc_states is not None:
+                pool.write_enc(slots, enc_states)
+            return SequenceState(
+                request=request, caches=None, enc_states=None,
+                out=[request.prompt], cur=request.prompt[:, -1:], t0=T0,
+                logits0=logits0, hidden0=hidden0, rng=request.rng,
+                slots=slots)
         max_seq = self.max_seq or (T0 + request.steps)
         caches, enc_states, logits0, hidden0 = self.backend.prefill(
             self.rag, request.prompt, max_seq)
@@ -396,6 +545,144 @@ class RalmEngine:
         else:
             seq.rng, k = jax.random.split(seq.rng)
             nxt = jax.random.categorical(k, log_or_prob).astype(jnp.int32)
+        self._emit(seq, nxt)
+
+    # -- the wave-batched step (one dispatch per phase per wave) ------------
+
+    def dispatch_wave(self, seqs: List[SequenceState]
+                      ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Phase 1, wave mode: ONE ``decode_wave`` dispatch advances every
+        step>0 sequence (step-0 sequences consume their prefill outputs —
+        nothing to run). Returns per-sequence (logits [B,V], hidden
+        [B,d]) views sliced from the wave outputs."""
+        outs: List = [None] * len(seqs)
+        wave = []
+        for i, seq in enumerate(seqs):
+            if seq.step == 0:
+                outs[i] = (seq.logits0, seq.hidden0)
+                seq.logits0 = seq.hidden0 = None
+            else:
+                wave.append((i, seq))
+        if not wave:
+            return outs
+        pool = self.pool
+        tokens = jnp.concatenate([seq.cur for _, seq in wave], axis=0)
+        slots = np.concatenate([seq.slots for _, seq in wave])
+        positions = np.concatenate(
+            [np.full(seq.cur.shape[0], seq.t0 + seq.step - 1, np.int32)
+             for _, seq in wave])
+        tokens, slots, positions = pool.pad_wave(tokens, slots, positions)
+        logits, pool.caches, hidden = self.backend.decode_wave(
+            pool.caches, tokens, jnp.asarray(slots),
+            jnp.asarray(positions), enc_states=pool.gather_enc(slots))
+        off = 0
+        for i, seq in wave:
+            B = seq.cur.shape[0]
+            outs[i] = (logits[off:off + B], hidden[off:off + B])
+            off += B
+        return outs
+
+    def dispatch_search_wave(self, seqs: List[SequenceState],
+                             decoded: List) -> List:
+        """Phase 2a/2b, wave mode: issue every due sequence's retrieval
+        query. Async retrievers coalesce via the service (flushed by the
+        scheduler's ``flush_searches``); synchronous retrievers get their
+        rows concatenated into ONE batched ``search`` here."""
+        searches: List = [None] * len(seqs)
+        due = [i for i, seq in enumerate(seqs)
+               if self._retrieval_due(seq.step)]
+        if not due:
+            return searches
+        submit = getattr(self.retriever, "search_async", None)
+        if submit is not None:
+            for i in due:
+                searches[i] = submit(decoded[i][1])
+            return searches
+        queries = jnp.concatenate([decoded[i][1] for i in due], axis=0)
+        dists, ids = self._search(queries)
+        off = 0
+        for i in due:
+            B = decoded[i][1].shape[0]
+            searches[i] = (dists[off:off + B], ids[off:off + B])
+            off += B
+        return searches
+
+    def finish_wave(self, seqs: List[SequenceState], decoded: List,
+                    searches: List) -> None:
+        """Phase 2c, wave mode: integrate + sample for the whole wave in
+        batched dispatches — one ``resolve`` + one ``knnlm_interpolate``
+        over all due rows, one RETRO re-encode over all due chunks, one
+        greedy argmax over every greedy row. Per-request ``rng`` sampling
+        stays per-sequence (each request owns an independent key chain,
+        so batching it would change the sampled tokens)."""
+        rag = self.rag
+        rows: List[jnp.ndarray] = []
+        knn = []                # (row_idx, logits, dists, ids)
+        retro = []              # (seq, chunks [B, k*chunk_len])
+        for seq, out, search in zip(seqs, decoded, searches):
+            logits, hidden = out
+            if search is not None:
+                if hasattr(search, "result"):      # async SearchHandle
+                    t0 = time.time()
+                    dists, ids = search.result()
+                    if self.times is not None:
+                        dists.block_until_ready()
+                        self.times.search_s.append(time.time() - t0)
+                else:                              # pre-sliced sync batch
+                    dists, ids = search
+                if seq.request.trace is not None:
+                    seq.request.trace.append(
+                        dict(step=seq.step, ids=np.asarray(ids)))
+                if rag.mode == "knnlm":
+                    knn.append((len(rows), logits, dists, ids))
+                elif rag.mode == "retro" and self.cfg.arch == "encdec":
+                    retro.append((seq, ids))
+            rows.append(logits)
+        if knn:
+            logits_cat = jnp.concatenate([e[1] for e in knn], axis=0)
+            dists_cat = jnp.concatenate([e[2] for e in knn], axis=0)
+            ids_cat = jnp.concatenate([e[3] for e in knn], axis=0)
+            toks = self.retriever.resolve(ids_cat, kind="tokens")
+            mixed = rag_lib.knnlm_interpolate(
+                logits_cat, dists_cat, toks, rag.lam, rag.temperature)
+            off = 0
+            for idx, logits, _, _ in knn:
+                B = logits.shape[0]
+                rows[idx] = mixed[off:off + B]
+                off += B
+        if retro:
+            # one chunk resolve + one re-encode over every due row, like
+            # the knnlm branch above
+            chunks = self.retriever.resolve(
+                jnp.concatenate([ids for _, ids in retro], axis=0),
+                kind="chunks")
+            W = chunks.shape[0]
+            enc = self.backend.encode_chunks(chunks.reshape(W, -1))
+            off = 0
+            for seq, _ in retro:
+                B = seq.cur.shape[0]
+                self.pool.write_enc(seq.slots, enc[off:off + B])
+                off += B
+        greedy = [i for i, seq in enumerate(seqs)
+                  if seq.request.greedy or seq.rng is None]
+        if greedy:
+            nxt_cat = jnp.argmax(
+                jnp.concatenate([rows[i] for i in greedy], axis=0),
+                axis=-1).astype(jnp.int32)
+            off = 0
+            for i in greedy:
+                B = rows[i].shape[0]
+                self._emit(seqs[i], nxt_cat[off:off + B])
+                off += B
+        for i, seq in enumerate(seqs):
+            if seq.request.greedy or seq.rng is None:
+                continue
+            seq.rng, k = jax.random.split(seq.rng)
+            self._emit(seq, jax.random.categorical(
+                k, rows[i]).astype(jnp.int32))
+
+    @staticmethod
+    def _emit(seq: SequenceState, nxt: jnp.ndarray) -> None:
         seq.cur = nxt[:, None]
         seq.out.append(seq.cur)
         seq.step += 1

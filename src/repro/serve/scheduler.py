@@ -5,25 +5,32 @@ Subsumes the old ``DisaggregatedRuntime.generate_pipelined`` round-robin:
 new work joins the next ``step()``), ``step()`` advances every active
 sequence one token in two phases:
 
-  phase 1 — dispatch the LM decode for *every* active sequence. jax
-     dispatch is async, so on a disaggregated deployment sequence A's
-     retrieval (phase 2) overlaps sequence B's decode on the other pool
-     — the paper's multi-process ChamLM overlap (Fig. 12 throughput).
-     (PoolTimes instrumentation blocks per pool step for measurement;
-     build the backend with ``measure=False`` for maximum overlap.)
-  phase 2a — issue every sequence's retrieval query. With an
+  phase 1 — ONE ``decode_wave`` dispatch advances every active
+     sequence over the engine's slotted ``KVCachePool`` (tokens [W],
+     slots [W], positions [W]; W bucketed to powers of two). jax
+     dispatch is async, so on a disaggregated deployment the wave's
+     retrieval (phase 2) overlaps its decode on the other pool — the
+     paper's batched GPU pool (§5) plus the multi-process ChamLM overlap
+     (Fig. 12 throughput). (PoolTimes instrumentation blocks per pool
+     step for measurement; build the backend with ``measure=False`` for
+     maximum overlap. The per-sequence oracle — ``wave=False`` on the
+     engine — instead dispatches one decode per sequence.)
+  phase 2a — issue every due sequence's retrieval query. With an
      ``AsyncRetriever`` the queries only *enqueue* on the
      ``RetrievalService`` (each returns a ``SearchHandle`` future) while
-     the phase-1 decodes are still in flight.
+     the phase-1 decode is still in flight; synchronous retrievers get
+     one batched ``search`` over the wave's due rows.
   phase 2b — one ``flush_searches()``: the whole wave's queries
      coalesce into a single batched IVF-scan/PQ-ADC/top-k dispatch.
-  phase 2c — per sequence: resolve the handle (or search synchronously
-     for plain retrievers) + integration + sampling, in the order the
-     decodes were dispatched.
+  phase 2c — resolve + integrate + sample, batched over the wave (one
+     ``resolve``/interpolate over all due rows, one argmax over all
+     greedy rows); per-request ``rng`` sampling stays per-sequence.
 
 Sequences finish independently (continuous batching): a request that was
 submitted later, or that asks for fewer steps, completes without waiting
-for the rest of the batch.
+for the rest of the batch — and frees its KV-pool slots for the next
+queued request. Admission consults ``engine.can_admit`` (fixed-capacity
+pools defer requests until slots free up) in strict FIFO order.
 """
 from __future__ import annotations
 
@@ -55,7 +62,10 @@ class RalmScheduler:
     # ------------------------------------------------------------------
     def submit(self, request: RalmRequest) -> int:
         """Enqueue a request; returns its id. Prefill happens at
-        admission (inside ``step``), not here."""
+        admission (inside ``step``), not here — but a request that can
+        never be admitted (more rows than the fixed KV pool holds) is
+        rejected now rather than wedging the FIFO queue later."""
+        self.engine.check_admissible(request)
         if request.request_id is None:
             request.request_id = self._next_id
         elif request.request_id in self._issued:
@@ -69,6 +79,8 @@ class RalmScheduler:
     def _admit(self) -> None:
         while self.queue and (self.max_active is None or
                               len(self.active) < self.max_active):
+            if not self.engine.can_admit(self.queue[0]):
+                break   # strict FIFO: a deferred head blocks later work
             self.active.append(self.engine.start(self.queue.popleft()))
 
     @property
@@ -89,10 +101,11 @@ class RalmScheduler:
         already_done = [s for s in self.active if s.done]
         self.active = [s for s in self.active if not s.done]
         for seq in already_done:
-            finished.append(RalmResponse(
-                request_id=seq.request.request_id,
-                tokens=np.asarray(seq.tokens()),
-                steps=seq.step, trace=seq.request.trace))
+            self.engine.release(seq)
+            finished.append(self._response(seq))
+        if self.engine.wave:
+            return finished + self._step_wave()
+        # --- per-sequence oracle path (wave=False) ---
         # phase 1: dispatch decode for every sequence (async)
         pending = [(seq, *self.engine.dispatch_decode(seq))
                    for seq in self.active]
@@ -107,14 +120,36 @@ class RalmScheduler:
         for (seq, logits, hidden), search in zip(pending, searches):
             self.engine.finish_step(seq, logits, hidden, search=search)
             if seq.done:
-                finished.append(RalmResponse(
-                    request_id=seq.request.request_id,
-                    tokens=np.asarray(seq.tokens()),
-                    steps=seq.step, trace=seq.request.trace))
+                finished.append(self._response(seq))
             else:
                 still_active.append(seq)
         self.active = still_active
         return finished
+
+    def _step_wave(self) -> List[RalmResponse]:
+        """Wave-batched step body: one dispatch per phase for the whole
+        active set (see the module docstring for the phases)."""
+        decoded = self.engine.dispatch_wave(self.active)
+        searches = self.engine.dispatch_search_wave(self.active, decoded)
+        self.engine.flush_searches()
+        self.engine.finish_wave(self.active, decoded, searches)
+        finished: List[RalmResponse] = []
+        still_active = []
+        for seq in self.active:
+            if seq.done:
+                self.engine.release(seq)   # slots free for queued work
+                finished.append(self._response(seq))
+            else:
+                still_active.append(seq)
+        self.active = still_active
+        return finished
+
+    @staticmethod
+    def _response(seq) -> RalmResponse:
+        return RalmResponse(
+            request_id=seq.request.request_id,
+            tokens=np.asarray(seq.tokens()),
+            steps=seq.step, trace=seq.request.trace)
 
     def run(self) -> List[RalmResponse]:
         """Drain the queue: step until nothing is queued or active."""

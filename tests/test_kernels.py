@@ -97,3 +97,27 @@ def test_ivf_scan_returns_true_l2():
     manual = np.sum((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2, -1)
     want = np.sort(manual, axis=1)[:, :4]
     np.testing.assert_allclose(np.asarray(dp), want, rtol=1e-4, atol=1e-4)
+
+
+def test_ivf_scan_small_nlist_fallback_warns_once():
+    """backend="pallas" with nlist < PALLAS_MIN_NLIST routes to the ref
+    scan — loudly, exactly once per process, with correct results."""
+    import warnings
+
+    from repro.kernels.ivf_scan import ops
+
+    ops._pallas_fallback_warned = False
+    q = jax.random.normal(jax.random.PRNGKey(4), (3, 16))
+    c = jax.random.normal(jax.random.PRNGKey(5), (ops.PALLAS_MIN_NLIST // 2,
+                                                  16))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        dp, ip = ivf_index_scan(q, c, 4, backend="pallas")
+        # second call with a fresh shape retraces; still only one warning
+        ivf_index_scan(q[:2], c, 4, backend="pallas")
+    msgs = [w for w in caught if "PALLAS_MIN_NLIST" in str(w.message)]
+    assert len(msgs) == 1 and issubclass(msgs[0].category, RuntimeWarning)
+    dr, ir = ref_ivf_scan(q, c, 4)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=1e-5,
+                               atol=1e-5)
+    assert (np.asarray(ip) == np.asarray(ir)).all()
