@@ -73,12 +73,13 @@ def fig9_search_latency() -> List[Dict]:
     import jax
     import jax.numpy as jnp
     from repro.kernels.pq_adc.ops import pq_adc_topk
+    from repro.kernels.registry import REF
     B, n, m = 8, 4096, 16
     luts = jax.random.normal(jax.random.PRNGKey(0), (B, m, 256))
     codes = jax.random.randint(jax.random.PRNGKey(1), (B, n, m), 0, 256,
                                jnp.uint8)
     lens = jnp.full((B,), n, jnp.int32)
-    f = lambda: pq_adc_topk(luts, codes, lens, 10, backend="ref")[0]
+    f = lambda: pq_adc_topk(luts, codes, lens, 10, spec=REF)[0]
     f()[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(5):

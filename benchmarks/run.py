@@ -10,6 +10,11 @@ queue-wait / scan / merge breakdown (see benchmarks/retrieval_bench.py).
 ``--mode serve`` sweeps tokens/s vs. active wave size over the
 wave-batched serving engine and writes ``BENCH_serve.json`` with the
 per-pool step breakdown (see benchmarks/serve_bench.py).
+
+``--mode kernels`` sweeps the fused single-dispatch ``chamvs_scan``
+against the staged per-shard pipeline over (batch, db size, nprobe,
+shards) and writes ``BENCH_kernels.json`` with the per-stage breakdown
+(see benchmarks/kernels_bench.py).
 """
 from __future__ import annotations
 
@@ -21,15 +26,21 @@ def main() -> None:
     # allow running as `python -m benchmarks.run` from the repo root
     sys.path.insert(0, "src")
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["figures", "retrieval", "serve"],
+    ap.add_argument("--mode",
+                    choices=["figures", "retrieval", "serve", "kernels"],
                     default="figures")
     ap.add_argument("--out", default=None,
-                    help="output path for --mode retrieval/serve")
+                    help="output path for --mode retrieval/serve/kernels")
     args = ap.parse_args()
 
     if args.mode == "retrieval":
         from benchmarks import retrieval_bench
         retrieval_bench.main(args.out or "BENCH_retrieval.json")
+        return
+
+    if args.mode == "kernels":
+        from benchmarks import kernels_bench
+        kernels_bench.main(args.out or "BENCH_kernels.json")
         return
 
     if args.mode == "serve":

@@ -2,13 +2,21 @@
 
 This module is the *kernel* side of the search engine — one memory
 node's LUT construction -> list streaming -> ADC -> truncated top-k',
-with pluggable backends:
+with pluggable backends routed through ``repro.kernels.registry``
+(``ChamVSConfig.kernel_spec()`` is the ``KernelSpec`` everything below
+here runs with):
 
   ``backend="ref"``    — pure-jnp gather ADC (paper's CPU flavor; also what
                           the multi-pod dry-run lowers, since Pallas does
                           not compile on the CPU backend).
   ``backend="pallas"`` — the near-memory Pallas kernels (interpret=True on
                           CPU).
+
+``shard_search`` below is the *staged* per-shard pipeline — kept as the
+parity oracle for the fused path. The serving default
+(``ChamVSConfig.fused=True``) runs ``kernels/chamvs_scan`` instead: ONE
+dispatch covering ADC + streaming top-k' for every shard of a retrieval
+wave (see ``retrieval/service._scan_stage_fused``).
 
 Everything *above* the kernel now lives in ``repro.retrieval``:
 
@@ -22,6 +30,7 @@ Everything *above* the kernel now lives in ``repro.retrieval``:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Optional, Tuple
@@ -33,6 +42,7 @@ from jax.sharding import Mesh
 from repro.core import ivfpq
 from repro.core.approx_topk_math import truncated_queue_len
 from repro.core.ivfpq import IVFPQConfig, IVFPQParams, IVFPQShard
+from repro.kernels.registry import KernelSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,19 +56,29 @@ class ChamVSConfig:
     backend: str = "ref"          # "ref" | "pallas"
     interpret: bool = True        # Pallas interpret mode (CPU container)
     num_l1_blocks: int = 16       # producers per shard for the approx queue
+    fused: bool = True            # ONE fused chamvs_scan dispatch over all
+    #                               shards per wave; False keeps the staged
+    #                               per-shard pipeline (the parity oracle)
+
+    def kernel_spec(self) -> KernelSpec:
+        """The registry ``KernelSpec`` this config routes kernels with —
+        the single place ``backend``/``interpret`` are interpreted."""
+        return KernelSpec(backend=self.backend, interpret=self.interpret)
 
     def with_kernel(self, backend: Optional[str] = None,
-                    interpret: Optional[bool] = None) -> "ChamVSConfig":
+                    interpret: Optional[bool] = None,
+                    fused: Optional[bool] = None) -> "ChamVSConfig":
         """Return a copy with the kernel selection overridden (``None``
         keeps the current value) — the one place the EngineConfig /
-        ServiceConfig ``kernel_backend`` / ``kernel_interpret`` knobs
-        are folded in."""
-        if backend is None and interpret is None:
+        ServiceConfig ``kernel_backend`` / ``kernel_interpret`` /
+        ``kernel_fused`` knobs are folded in."""
+        if backend is None and interpret is None and fused is None:
             return self
         return dataclasses.replace(
             self,
             backend=backend if backend is not None else self.backend,
-            interpret=interpret if interpret is not None else self.interpret)
+            interpret=interpret if interpret is not None else self.interpret,
+            fused=fused if fused is not None else self.fused)
 
     def k_prime(self, num_shards: int) -> int:
         """Truncated per-shard queue length (paper §4.2.2): the shards are the
@@ -70,7 +90,10 @@ class ChamVSConfig:
 
 
 # ---------------------------------------------------------------------------
-# per-shard search (runs inside shard_map; also usable standalone)
+# per-shard search (runs inside shard_map; also usable standalone).
+# This is the STAGED path — the fused single-dispatch twin is
+# kernels/chamvs_scan.ops.fused_shard_scan; the two must stay
+# result-identical (tests/test_chamvs_scan.py property test).
 # ---------------------------------------------------------------------------
 
 def shard_search(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray,
@@ -94,7 +117,7 @@ def shard_search(params: IVFPQParams, shard: IVFPQShard, queries: jnp.ndarray,
             codes.reshape(B, icfg.list_cap, icfg.m),
             lens.reshape(B),
             k=min(kk, icfg.list_cap),
-            backend="pallas", interpret=cfg.interpret)
+            spec=cfg.kernel_spec())
         # local row idx -> global vector id via the per-list id table
         gid = jnp.take_along_axis(
             ids.reshape(B, icfg.list_cap),
@@ -131,21 +154,45 @@ def stack_shards(shards: list[IVFPQShard]) -> IVFPQShard:
     )
 
 
+# LRU memo of the last few (params, shards, cfg) -> RetrievalService. A
+# fresh service per call would re-pack the whole database with
+# ``stack_shards`` every time (the fused path's one-dispatch layout) —
+# fine once per deployment, pathological per search. Keyed on the jax
+# buffer identities: the cached service holds references to those exact
+# buffers, so a live key can never alias a different index. The memo
+# deliberately pins up to ``_SERVICE_MEMO_CAP`` indexes (including their
+# packed fused stacks) in device memory; long-lived processes juggling
+# many indexes should hold their own ``RetrievalService`` instead, or
+# ``_SERVICE_MEMO.clear()`` to release them.
+_SERVICE_MEMO: "collections.OrderedDict" = collections.OrderedDict()
+_SERVICE_MEMO_CAP = 4
+
+
 def search_single(params: IVFPQParams, shards: list[IVFPQShard],
                   queries: jnp.ndarray, cfg: ChamVSConfig
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-process search over a list of shards (tests, builds).
 
     Now a one-shot ``RetrievalService`` call, so the legacy path and the
-    serving path share one implementation (the service's jitted stages
-    are module-level, so repeated calls don't re-trace). ``measure`` and
+    serving path share one implementation (the service is memoized per
+    (index, config) and its jitted stages are module-level, so repeated
+    calls neither re-pack the shard stack nor re-trace). ``measure`` and
     ``bucket_pow2`` are off: a bare function call should not block the
     dispatch stream for stage timings, and a one-shot batch gains
     nothing from shape bucketing (it would only scan padded rows)."""
     from repro.retrieval.service import RetrievalService, ServiceConfig
-    svc = RetrievalService.local(params, shards, cfg,
-                                 ServiceConfig(measure=False,
-                                               bucket_pow2=False))
+    key = (tuple(id(leaf) for s in shards for leaf in s),
+           id(params.coarse_centroids), id(params.codebooks), cfg)
+    svc = _SERVICE_MEMO.get(key)
+    if svc is None:
+        svc = RetrievalService.local(params, shards, cfg,
+                                     ServiceConfig(measure=False,
+                                                   bucket_pow2=False))
+        while len(_SERVICE_MEMO) >= _SERVICE_MEMO_CAP:
+            _SERVICE_MEMO.popitem(last=False)    # evict least-recent
+        _SERVICE_MEMO[key] = svc
+    else:
+        _SERVICE_MEMO.move_to_end(key)           # LRU refresh on hit
     return svc.search(queries)
 
 

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# All frontends route through repro.kernels.registry (KernelSpec:
+# backend / interpret / tile heuristics / fallback policy); see
+# docs/kernels.md.
+from repro.kernels.registry import KernelSpec, reset_warnings  # noqa: F401

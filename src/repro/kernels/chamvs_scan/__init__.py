@@ -1,0 +1,3 @@
+"""Fused streaming ChamVS scan: ADC + running top-k' over all shards in
+ONE kernel dispatch (paper §4's pipelined dataflow on TPU)."""
+from repro.kernels.chamvs_scan.ops import chamvs_scan  # noqa: F401

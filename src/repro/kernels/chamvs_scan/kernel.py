@@ -1,0 +1,133 @@
+"""Pallas kernel: the fused streaming ChamVS scan (paper §4 dataflow).
+
+The paper's near-memory accelerator is a *pipeline*, not a sequence of
+kernels: the systolic PQ decoder streams ADC distances straight into the
+K-selection priority-queue network, and the full distance array never
+exists anywhere (§4.2). The staged reproduction ran three dispatches
+per shard (ADC scan -> materialized [B, n] distances -> top-k) with a
+Python loop over shards on top. This kernel is the dataflow-faithful
+version:
+
+  * grid ``(S, nq // tile_q, nprobe)`` — the leading **shard axis**
+    makes the scan over every memory node's slice ONE dispatch per
+    retrieval wave;
+  * per grid step, the probed list's code tile streams HBM->VMEM, the
+    per-(query, probe) LUT turns codes into ADC partial distances
+    (compare-FMA — the TPU VPU has no per-lane byte-addressable BRAM,
+    see pq_adc/kernel.py), and the ``[tile_q, cap]`` distance tile is
+    folded immediately into a per-query **running top-k'** carried in
+    the output refs across the probe grid axis (their index_map ignores
+    the probe index, so the queue is scratch-resident between steps —
+    streaming K-selection, paper §4.2.2);
+  * global vector ids ride along with the distances, so the candidate
+    the queue keeps is already ``(dist, global_id)`` — no separate
+    local-row -> id remap dispatch afterwards.
+
+Validated against the staged pipeline and ``ref.py`` in
+``tests/test_chamvs_scan.py`` (hypothesis property test).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import extract_topk_rows
+
+
+def _chamvs_scan_kernel(lens_ref, lut_ref, codes_ref, gid_ref,
+                        out_d_ref, out_i_ref, *,
+                        tile_q: int, cap: int, m: int, ksub: int, kk: int):
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, jnp.inf)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    codes = codes_ref[0, :, 0].astype(jnp.int32)          # [tile_q, cap, m]
+    lut = lut_ref[:, 0]                                   # [tile_q, m, ksub]
+    # ADC as compare-FMA, one query row at a time: per (query, sub-space),
+    # one-hot the code bytes against the iota and contract the ksub axis
+    # with that query's LUT row (pq_adc's trick — the TPU VPU has no
+    # per-lane byte-addressable BRAM). Looping queries inside the step
+    # keeps the [cap, ksub] intermediate at the same cache-resident size
+    # as the staged kernel's, while the step count stays tile_q x smaller.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (cap, ksub), 1)
+
+    def q_body(qi, dist_acc):
+        cq = jax.lax.dynamic_index_in_dim(codes, qi, 0, False)  # [cap, m]
+        lq = jax.lax.dynamic_index_in_dim(lut, qi, 0, False)    # [m, ksub]
+
+        def m_body(j, acc):
+            cj = jax.lax.dynamic_slice_in_dim(cq, j, 1, axis=1)      # [cap,1]
+            lj = jax.lax.dynamic_slice_in_dim(lq, j, 1, axis=0)[0]   # [ksub]
+            eq = (iota == cj).astype(lut.dtype)                  # [cap,ksub]
+            return acc + eq @ lj                                 # [cap]
+
+        d = jax.lax.fori_loop(0, m, m_body, jnp.zeros((cap,), lut.dtype))
+        return jax.lax.dynamic_update_index_in_dim(
+            dist_acc, d[None], qi, 0)
+
+    dist = jax.lax.fori_loop(0, tile_q, q_body,
+                             jnp.zeros((tile_q, cap), lut.dtype))
+
+    # rows beyond the probed list's valid length get +inf (their gid is
+    # already the -1 sentinel in the padded id table)
+    n_valid = lens_ref[0, :, 0]                           # [tile_q]
+    col = jax.lax.broadcasted_iota(jnp.int32, (tile_q, cap), 1)
+    dist = jnp.where(col < n_valid[:, None], dist, jnp.inf)
+
+    # fold the tile into the running queue carried across the probe axis
+    cand_d = jnp.concatenate([out_d_ref[0], dist], axis=1)
+    cand_i = jnp.concatenate([out_i_ref[0], gid_ref[0, :, 0]], axis=1)
+    top_d, top_i = extract_topk_rows(cand_d, cand_i, kk)
+    out_d_ref[0] = top_d
+    out_i_ref[0] = top_i
+
+
+@functools.partial(jax.jit, static_argnames=("kk", "tile_q", "interpret"))
+def fused_scan(luts: jnp.ndarray, codes: jnp.ndarray, gids: jnp.ndarray,
+               lens: jnp.ndarray, kk: int, tile_q: int = 8,
+               interpret: bool = True
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One dispatch: ADC + streaming top-kk over every shard's probed lists.
+
+    luts:  [nq, nprobe, m, ksub] f32 — per-(query, probed list) LUTs
+           (shared by all shards; residual PQ makes them probe-dependent)
+    codes: [S, nq, nprobe, cap, m] uint8 — gathered probed-list codes
+    gids:  [S, nq, nprobe, cap] int32 — global vector ids (-1 = pad)
+    lens:  [S, nq, nprobe] int32 — valid prefix length per probed list
+    Returns (dists [S, nq, kk], ids [S, nq, kk]) ascending; ids are
+    global vector ids, -1 where fewer than kk candidates exist.
+    """
+    S, nq, nprobe, cap, m = codes.shape
+    ksub = luts.shape[-1]
+    assert nq % tile_q == 0, (nq, tile_q)
+    grid = (S, nq // tile_q, nprobe)
+    kernel = functools.partial(_chamvs_scan_kernel, tile_q=tile_q, cap=cap,
+                               m=m, ksub=ksub, kk=kk)
+    out_shape = (
+        jax.ShapeDtypeStruct((S, nq, kk), luts.dtype),
+        jax.ShapeDtypeStruct((S, nq, kk), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, 1), lambda s, q, p: (s, q, p)),
+            pl.BlockSpec((tile_q, 1, m, ksub), lambda s, q, p: (q, p, 0, 0)),
+            pl.BlockSpec((1, tile_q, 1, cap, m),
+                         lambda s, q, p: (s, q, p, 0, 0)),
+            pl.BlockSpec((1, tile_q, 1, cap), lambda s, q, p: (s, q, p, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, tile_q, kk), lambda s, q, p: (s, q, 0)),
+            pl.BlockSpec((1, tile_q, kk), lambda s, q, p: (s, q, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(lens, luts, codes, gids)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused ChamVS scan.
+
+Same contract as ``kernel.fused_scan`` — one call covers every shard —
+formulated as a ``vmap`` over the shard axis of (gather-ADC -> padding
+mask -> one exact top-kk). This is also what ``backend="ref"`` serves:
+it is *fused* in the one-dispatch sense (no Python loop over shards, no
+per-shard dispatches — the whole stack lowers to one XLA executable),
+just not streaming. The vmap-over-shards form measurably beats both the
+broadcast form (``adc_scan_ref(luts[None], codes)``) and the unrolled
+per-shard loop on CPU — XLA fuses the per-shard mask/select chain
+better when the shard axis is a real batch axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ivfpq import adc_scan_ref
+
+
+def ref_chamvs_scan(luts: jnp.ndarray, codes: jnp.ndarray,
+                    gids: jnp.ndarray, lens: jnp.ndarray, kk: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """luts [nq,np,m,ksub], codes [S,nq,np,cap,m], gids [S,nq,np,cap],
+    lens [S,nq,np] -> (dists [S,nq,kk], ids [S,nq,kk]) ascending."""
+    S, nq, nprobe, cap, _ = codes.shape
+    keep = min(kk, nprobe * cap)
+
+    def per_shard(c, g, l):
+        d = adc_scan_ref(luts, c)                         # [nq, np, cap]
+        valid = jnp.arange(cap)[None, None, :] < l[..., None]
+        d = jnp.where(valid, d, jnp.inf)
+        flat_d = d.reshape(nq, nprobe * cap)
+        flat_i = g.reshape(nq, nprobe * cap)
+        neg, pos = jax.lax.top_k(-flat_d, keep)
+        out_d = -neg
+        out_i = jnp.take_along_axis(flat_i, pos, axis=-1)
+        return out_d, jnp.where(jnp.isinf(out_d), -1, out_i)
+
+    out_d, out_i = jax.vmap(per_shard)(codes, gids, lens)
+    if keep < kk:   # fewer candidates than kk: pad like the kernel queue
+        pad = ((0, 0), (0, 0), (0, kk - keep))
+        out_d = jnp.pad(out_d, pad, constant_values=jnp.inf)
+        out_i = jnp.pad(out_i, pad, constant_values=-1)
+    return out_d, out_i

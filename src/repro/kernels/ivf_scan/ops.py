@@ -1,56 +1,53 @@
-"""Public wrapper for the fused IVF index scan."""
+"""Public wrapper for the fused IVF index scan, routed through the
+kernel registry (``repro.kernels.registry``).
+
+The routing decision (Pallas vs reference, tile sizes, the small-index
+fallback) lives *outside* the jit boundary so the registry's fallback
+counter and one-time warning fire per call — or, when this frontend is
+traced inside an outer jit, once per traced shape.
+"""
 from __future__ import annotations
 
-import functools
-import warnings
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.ivf_scan import kernel as _k
 from repro.kernels.ivf_scan import ref as _ref
 
 # Below this many IVF lists the Pallas kernel cannot tile profitably
 # (tile_c would degenerate to the whole centroid table and the grid to a
 # single program), so ``backend="pallas"`` transparently routes to the
-# reference scan. Benchmarks that sweep tiny indexes must know their
-# "pallas" numbers are really ref numbers — hence the one-time warning.
+# reference scan — loudly, via registry.record_fallback, so benchmarks
+# that sweep tiny indexes know their "pallas" numbers are ref numbers.
 PALLAS_MIN_NLIST = 128
 
-_pallas_fallback_warned = False
+_jit_ref = jax.jit(_ref.ref_ivf_scan, static_argnames=("nprobe",))
 
 
-def _warn_pallas_fallback(nlist: int) -> None:
-    global _pallas_fallback_warned
-    if _pallas_fallback_warned:
-        return
-    _pallas_fallback_warned = True
-    warnings.warn(
-        f"ivf_index_scan: backend='pallas' requested but nlist={nlist} < "
-        f"PALLAS_MIN_NLIST={PALLAS_MIN_NLIST}; falling back to the "
-        "reference scan (benchmark numbers for this index size are NOT "
-        "Pallas numbers). This warning is emitted once per process.",
-        RuntimeWarning, stacklevel=3)
-
-
-@functools.partial(jax.jit, static_argnames=("nprobe", "backend", "interpret"))
-def ivf_index_scan(queries: jnp.ndarray, centroids: jnp.ndarray, nprobe: int,
-                   backend: str = "pallas", interpret: bool = True
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def ivf_index_scan(queries, centroids, nprobe: int,
+                   spec: Optional[registry.KernelSpec] = None,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
     """Select the nprobe closest IVF lists per query (ChamVS.idx).
 
-    queries [nq, D], centroids [nlist, D] -> (dists, list_ids) [nq, nprobe]."""
+    queries [nq, D], centroids [nlist, D] -> (dists, list_ids)
+    [nq, nprobe]. ``backend=``/``interpret=`` are deprecated aliases for
+    ``spec=KernelSpec(...)``."""
+    spec = registry.resolve("ivf_index_scan", spec, backend, interpret)
     nq = queries.shape[0]
     nlist = centroids.shape[0]
-    if backend == "ref":
-        return _ref.ref_ivf_scan(queries, centroids, nprobe)
-    if backend == "pallas":
+    if spec.backend == "pallas":
         if nlist < PALLAS_MIN_NLIST:
-            _warn_pallas_fallback(nlist)
-            return _ref.ref_ivf_scan(queries, centroids, nprobe)
-        tile_q = 8 if nq % 8 == 0 else (4 if nq % 4 == 0 else 1)
-        tile_c = 512 if nlist % 512 == 0 else (128 if nlist % 128 == 0 else nlist)
-        return _k.ivf_scan(queries, centroids, nprobe,
-                           tile_q=tile_q, tile_c=tile_c, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+            registry.record_fallback(
+                "ivf_index_scan",
+                f"nlist={nlist} < PALLAS_MIN_NLIST={PALLAS_MIN_NLIST}",
+                spec)
+        else:
+            return _k.ivf_scan(queries, centroids, nprobe,
+                               tile_q=spec.pick_tile_q(nq),
+                               tile_c=spec.pick_tile_c(nlist),
+                               interpret=spec.interpret)
+    return _jit_ref(queries, centroids, nprobe=nprobe)

@@ -64,6 +64,10 @@ def main() -> None:
     ap.add_argument("--no-interpret", action="store_true",
                     help="run Pallas kernels compiled instead of in "
                          "interpret mode (needs a real accelerator)")
+    ap.add_argument("--staged-scan", action="store_true",
+                    help="per-shard staged scan pipeline (one chamvs "
+                         "dispatch per shard; the parity oracle) instead "
+                         "of the fused single-dispatch chamvs_scan")
     args = ap.parse_args()
 
     from repro.models import transformer as tf
@@ -88,7 +92,9 @@ def main() -> None:
                            kv_slots=args.kv_slots,
                            kernel_backend=args.kernel_backend,
                            kernel_interpret=(False if args.no_interpret
-                                             else None))
+                                             else None),
+                           kernel_fused=(False if args.staged_scan
+                                         else None))
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -122,7 +128,8 @@ def main() -> None:
     if service is not None:
         st = service.stats
         line = (f"[serve] retrieval service: {st.batched_rows} rows in "
-                f"{st.num_batches} dispatches "
+                f"{st.num_batches} waves / {st.scan_dispatches} scan "
+                f"dispatches "
                 f"(coalescing {st.coalescing_factor():.1f}x, "
                 f"cache {st.cache_hits} hit / {st.cache_misses} miss)")
         if service.config.measure:

@@ -36,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ivfpq
-from repro.core.chamvs import ChamVSConfig, shard_search
+from repro.core.chamvs import ChamVSConfig, shard_search, stack_shards
 from repro.core.ivfpq import IVFPQParams, IVFPQShard
+from repro.kernels.chamvs_scan.ops import fused_shard_scan
+from repro.kernels.ivf_scan.ops import ivf_index_scan
 from repro.retrieval import merge as merge_lib
 from repro.retrieval.cache import QueryCache
 from repro.retrieval.stats import RetrievalStats
@@ -68,6 +70,10 @@ class ServiceConfig:
     #                               can select the Pallas scan path
     kernel_interpret: Optional[bool] = None  # override ChamVSConfig.
     #                               interpret (Pallas interpret mode)
+    kernel_fused: Optional[bool] = None  # override ChamVSConfig.fused:
+    #                               one fused chamvs_scan dispatch per
+    #                               wave (True) vs the staged per-shard
+    #                               pipeline (False, the parity oracle)
 
 
 def next_pow2(n: int) -> int:
@@ -80,22 +86,52 @@ def next_pow2(n: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# the two pipeline stages, jitted once at module level (shared across
+# the pipeline stages, jitted once at module level (shared across
 # service instances and the `search_single` one-shot path)
 # ---------------------------------------------------------------------------
+
+def _probe_stage(params: IVFPQParams, queries: jnp.ndarray,
+                 cfg: ChamVSConfig) -> jnp.ndarray:
+    """ChamVS.idx: pick the nprobe closest IVF lists per query. Shared
+    by the fused and staged paths (parity requires identical probes),
+    routed through the registry frontend when the config asks for the
+    Pallas centroid scan."""
+    spec = cfg.kernel_spec()
+    if spec.backend == "pallas":
+        _, probe_ids = ivf_index_scan(queries, params.coarse_centroids,
+                                      cfg.nprobe, spec=spec)
+    else:
+        _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
+    return probe_ids
+
 
 @functools.partial(jax.jit, static_argnames=("cfg", "kk"))
 def _scan_stage(params: IVFPQParams, shards: Tuple[IVFPQShard, ...],
                 queries: jnp.ndarray, *, cfg: ChamVSConfig, kk: int
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Centroid scan + per-shard IVF/PQ scan + per-shard top-kk.
+    """STAGED scan: centroid scan + Python loop of per-shard IVF/PQ
+    scans + per-shard top-kk — one chamvs dispatch per shard. Kept as
+    the parity oracle for ``_scan_stage_fused``.
 
     Returns stacked candidates (dists [S, nq, kk], ids [S, nq, kk])."""
-    _, probe_ids = ivfpq.scan_ivf_index(params, queries, cfg.nprobe)
+    probe_ids = _probe_stage(params, queries, cfg)
     per = [shard_search(params, s, queries, probe_ids, cfg, kk)
            for s in shards]
     return (jnp.stack([p[0] for p in per]),
             jnp.stack([p[1] for p in per]))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kk"))
+def _scan_stage_fused(params: IVFPQParams, stacked: IVFPQShard,
+                      queries: jnp.ndarray, *, cfg: ChamVSConfig, kk: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FUSED scan (the serving default): centroid scan + ONE
+    ``chamvs_scan`` dispatch covering ADC + streaming top-kk for every
+    shard in the ``stack_shards``-packed stack — no materialized
+    [B, n] distance matrix, no per-shard dispatch loop, no separate
+    top-k pass. Same return contract as ``_scan_stage``."""
+    probe_ids = _probe_stage(params, queries, cfg)
+    return fused_shard_scan(params, stacked, queries, probe_ids, cfg, kk)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "fanout"))
@@ -106,7 +142,17 @@ def _merge_stage(dists: jnp.ndarray, ids: jnp.ndarray, *, k: int,
 
 
 class LocalPipeline:
-    """Single-process scan/merge over a list of shards."""
+    """Single-process scan/merge over a list of shards.
+
+    ``cfg.fused`` picks the scan flavor: the fused single-dispatch
+    ``chamvs_scan`` over a ``stack_shards``-packed stack (default), or
+    the staged per-shard loop (the parity oracle). The packed stack is
+    a second copy of the code tables — it IS the fused path's physical
+    layout (one contiguous [S, ...] allocation the single dispatch
+    scans), priced once per service; ``chamvs.search_single`` memoizes
+    its service so one-shot callers don't re-pack per call. Deployments
+    that cannot afford the copy run ``fused=False``.
+    """
 
     row_multiple = 1    # no constraint on the batched row count
 
@@ -114,6 +160,7 @@ class LocalPipeline:
                  cfg: ChamVSConfig):
         self.params = params
         self.shards = tuple(shards)
+        self.stacked = stack_shards(list(shards)) if cfg.fused else None
         self.cfg = cfg
         self.kk = cfg.k_prime(len(self.shards))
 
@@ -121,7 +168,16 @@ class LocalPipeline:
     def k(self) -> int:
         return self.cfg.k
 
+    @property
+    def scan_dispatches(self) -> int:
+        """ChamVS scan kernel dispatches per flush: ONE for the fused
+        path regardless of shard count, one per shard when staged."""
+        return 1 if self.cfg.fused else max(1, len(self.shards))
+
     def scan(self, queries: jnp.ndarray):
+        if self.cfg.fused:
+            return _scan_stage_fused(self.params, self.stacked, queries,
+                                     cfg=self.cfg, kk=self.kk)
         return _scan_stage(self.params, self.shards, queries,
                            cfg=self.cfg, kk=self.kk)
 
@@ -135,6 +191,8 @@ class RouterPipeline:
     happens in-network inside the shard_map graph, so the merge stage is
     a pass-through (its time is accounted under scan and
     ``ServiceConfig.merge_fanout`` does not apply)."""
+
+    scan_dispatches = 1   # the whole in-graph search is one dispatch
 
     def __init__(self, router, params: IVFPQParams,
                  shards: List[IVFPQShard]):
@@ -225,7 +283,8 @@ class RetrievalService:
         config by hand."""
         if config is not None:
             cfg = cfg.with_kernel(config.kernel_backend,
-                                  config.kernel_interpret)
+                                  config.kernel_interpret,
+                                  config.kernel_fused)
         return cls(LocalPipeline(params, shards, cfg), config=config)
 
     @classmethod
@@ -238,12 +297,13 @@ class RetrievalService:
         ``ServiceConfig`` kernel overrides cannot apply here — reject
         them loudly rather than silently serving ref-scan numbers."""
         if config is not None and (config.kernel_backend is not None or
-                                   config.kernel_interpret is not None):
+                                   config.kernel_interpret is not None or
+                                   config.kernel_fused is not None):
             raise ValueError(
-                "ServiceConfig.kernel_backend/kernel_interpret cannot "
-                "override a distributed pipeline — the ShardRouter owns "
-                "its ChamVSConfig; build the router with "
-                "cfg.with_kernel(...) instead")
+                "ServiceConfig.kernel_backend/kernel_interpret/"
+                "kernel_fused cannot override a distributed pipeline — "
+                "the ShardRouter owns its ChamVSConfig; build the router "
+                "with cfg.with_kernel(...) instead")
         return cls(RouterPipeline(router, params, shards), config=config)
 
     # -- the in-flight request table ---------------------------------------
@@ -343,7 +403,8 @@ class RetrievalService:
             jax.block_until_ready((dists, ids))
             self.stats.scan.add(t1 - t0)
             self.stats.merge.add(time.perf_counter() - t1)
-        self.stats.record_batch(nrows)
+        self.stats.record_batch(
+            nrows, dispatches=getattr(self.pipeline, "scan_dispatches", 1))
 
         offset = 0
         for entry, q in pending:

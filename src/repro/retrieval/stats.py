@@ -39,9 +39,17 @@ class StageStat:
 class RetrievalStats:
     """Counters + stage timings for one ``RetrievalService``.
 
-    ``num_batches`` counts kernel dispatches (one per flush); dividing
-    ``num_queries`` by it gives the achieved coalescing factor — the
-    quantity the deadline/max_batch knobs trade against queue wait.
+    ``num_batches`` counts flushes (one batched scan+merge per flush);
+    dividing ``num_queries`` by it gives the achieved coalescing factor
+    — the quantity the deadline/max_batch knobs trade against queue
+    wait. ``scan_dispatches`` counts the underlying ChamVS scan kernel
+    dispatches: with the fused ``chamvs_scan`` path it equals
+    ``num_batches`` regardless of shard count (one dispatch per wave);
+    with the staged oracle it is ``num_batches * num_shards``. The
+    per-flush dispatch count is derived from the pipeline's structure
+    (``LocalPipeline.scan_dispatches``); the structure itself is pinned
+    by a jaxpr-level test counting ``pallas_call``s
+    (tests/test_chamvs_scan.py::test_fused_graph_contains_single_scan_kernel).
     """
 
     def __init__(self) -> None:
@@ -49,7 +57,11 @@ class RetrievalStats:
 
     def reset(self) -> None:
         self.num_queries = 0          # query rows submitted
-        self.num_batches = 0          # kernel dispatches (flushes)
+        self.num_batches = 0          # flushes (batched scan+merge runs)
+        self.scan_dispatches = 0      # ChamVS scan kernel dispatches: the
+        #                               fused path issues ONE per flush
+        #                               regardless of shard count, the
+        #                               staged oracle one per shard
         self.batched_rows = 0         # query rows that reached a dispatch
         self.cache_hits = 0           # query rows answered from cache
         self.cache_misses = 0         # query rows that went to the kernel
@@ -69,8 +81,9 @@ class RetrievalStats:
         self._t_last = now
         self.num_queries += nrows
 
-    def record_batch(self, nrows: int) -> None:
+    def record_batch(self, nrows: int, dispatches: int = 1) -> None:
         self.num_batches += 1
+        self.scan_dispatches += dispatches
         self.batched_rows += nrows
         self._t_last = time.perf_counter()
         if nrows > self.max_coalesced:
@@ -94,6 +107,7 @@ class RetrievalStats:
         return dict(
             num_queries=self.num_queries,
             num_batches=self.num_batches,
+            scan_dispatches=self.scan_dispatches,
             batched_rows=self.batched_rows,
             coalescing_factor=self.coalescing_factor(),
             cache_hits=self.cache_hits,

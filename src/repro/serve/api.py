@@ -103,6 +103,10 @@ class EngineConfig:
     #                                      deployment config
     kernel_interpret: Optional[bool] = None  # override Pallas interpret
     #                                      mode (CPU containers need True)
+    kernel_fused: Optional[bool] = None  # override ChamVSConfig.fused:
+    #                                      ONE chamvs_scan dispatch per
+    #                                      retrieval wave (True) vs the
+    #                                      staged per-shard oracle (False)
 
 
 # ---------------------------------------------------------------------------

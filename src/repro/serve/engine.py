@@ -335,9 +335,11 @@ class RalmEngine:
         monolithic engine (with a warning) when ``disaggregate`` is
         requested on a single-device host."""
         # plumb the search-kernel selection (Pallas vs ref, interpret
-        # mode) from the deployment config down to ChamVSConfig
+        # mode, fused vs staged scan) from the deployment config down to
+        # ChamVSConfig — the registry KernelSpec everything routes with
         search_cfg = search_cfg.with_kernel(config.kernel_backend,
-                                            config.kernel_interpret)
+                                            config.kernel_interpret,
+                                            config.kernel_fused)
         if config.disaggregate and len(jax.devices()) < 2:
             import warnings
             warnings.warn(

@@ -2,10 +2,25 @@ import pathlib
 import sys
 import types
 
+import pytest
+
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device
 # (the 512-device override lives only in launch/dryrun.py). Multi-device
 # tests spawn subprocesses (tests/test_distributed.py).
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+@pytest.fixture(autouse=True)
+def _reset_kernel_registry():
+    """The kernel registry's one-time warnings and fallback counters are
+    module-global ("once per process"); reset them around every test so
+    no test leaks warning state into another — the bug the old
+    ``ivf_scan.ops._pallas_fallback_warned`` global had."""
+    from repro.kernels import registry
+
+    registry.reset_warnings()
+    yield
+    registry.reset_warnings()
 
 try:
     from hypothesis import settings, HealthCheck

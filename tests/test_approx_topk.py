@@ -8,6 +8,8 @@ from repro.core.approx_topk_math import (binom_pmf,
                                          queue_overflow_prob,
                                          resource_saving,
                                          truncated_queue_len)
+from repro.kernels import registry
+from repro.kernels.registry import PALLAS_INTERPRET, REF
 from repro.kernels.topk.ops import approx_topk
 from repro.kernels.topk.ref import ref_exact_topk
 
@@ -65,8 +67,8 @@ def test_overflow_prob_observed():
        st.integers(0, 1000))
 def test_kernel_matches_approx_oracle(k, nblocks, seed):
     d = jax.random.normal(jax.random.PRNGKey(seed), (8, 512))
-    dp, ip = approx_topk(d, k, num_blocks=nblocks, backend="pallas")
-    dr, ir = approx_topk(d, k, num_blocks=nblocks, backend="ref")
+    dp, ip = approx_topk(d, k, num_blocks=nblocks, spec=PALLAS_INTERPRET)
+    dr, ir = approx_topk(d, k, num_blocks=nblocks, spec=REF)
     np.testing.assert_array_equal(np.asarray(dp), np.asarray(dr))
     np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
 
@@ -76,7 +78,8 @@ def test_kernel_exactness_rate():
     of rows (the paper's 99% design point)."""
     d = jax.random.normal(jax.random.PRNGKey(7), (256, 2048))
     k, nb = 100, 16
-    da, _ = approx_topk(d, k, num_blocks=nb, eps=0.01, backend="pallas")
+    da, _ = approx_topk(d, k, num_blocks=nb, eps=0.01,
+                        spec=PALLAS_INTERPRET)
     de, _ = ref_exact_topk(d, k)
     row_exact = np.all(np.asarray(da) == np.asarray(de), axis=1)
     assert row_exact.mean() >= 0.99, row_exact.mean()
@@ -85,7 +88,32 @@ def test_kernel_exactness_rate():
 def test_inf_padding_semantics():
     d = jnp.full((8, 256), jnp.inf).at[:, :3].set(
         jnp.arange(3, dtype=jnp.float32))
-    dd, ii = approx_topk(d, 5, num_blocks=4, backend="pallas")
+    dd, ii = approx_topk(d, 5, num_blocks=4, spec=PALLAS_INTERPRET)
     assert (np.asarray(ii[:, 3:]) == -1).all()
     np.testing.assert_array_equal(np.asarray(ii[:, :3]),
                                   np.tile(np.arange(3), (8, 1)))
+
+
+def test_degenerate_tile_fallback_is_surfaced():
+    """Satellite: the degenerate-tile route to the exact reference path
+    used to be silent — "pallas" benchmark numbers could really be ref
+    numbers. It now warns once and bumps the registry counter (while
+    still returning the exact result)."""
+    import warnings
+
+    d = jax.random.normal(jax.random.PRNGKey(3), (4, 500))   # 500 % 16 != 0
+    assert registry.fallback_count("approx_topk") == 0
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        da, ia = approx_topk(d, 10, num_blocks=16, spec=PALLAS_INTERPRET)
+        approx_topk(d, 10, num_blocks=16, spec=PALLAS_INTERPRET)
+    msgs = [w for w in caught if "degenerate tiling" in str(w.message)]
+    assert len(msgs) == 1 and issubclass(msgs[0].category, RuntimeWarning)
+    assert registry.fallback_count("approx_topk") == 2
+    de, ie = ref_exact_topk(d, 10)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(de))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ie))
+    # a ref-backend request for the same shape is NOT a fallback
+    registry.reset_warnings()
+    approx_topk(d, 10, num_blocks=16, spec=REF)
+    assert registry.fallback_count("approx_topk") == 0
