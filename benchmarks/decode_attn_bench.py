@@ -1,0 +1,186 @@
+"""Decode-attention sweep (``--mode decode-attn``): the routed
+length-aware kernel path vs the legacy einsum path.
+
+One row per (B, pool seq axis S, window, GQA ratio): a ragged decode
+wave (rows filled to ~1/8..1/2 of the pool, the continuous-batching
+steady state) served by
+
+  * **legacy** — ``decode_attention_einsum``: GQA heads materialized to
+    ``[B, S, H, D]`` and one full ``[B, H, 1, S]`` score row over the
+    entire padded pool seq axis (the pre-kernel path, "kernel off");
+  * **kernel** — the routed decode-attn path exactly as the serve
+    engine runs it on this host: the cache read cropped (inside jit,
+    static ``kv_len``) to the wave's 128-aligned valid prefix, then the
+    grouped-einsum flavor contracting the KV-head axis directly —
+    ``backend="ref"``, the CPU serving flavor of the
+    ``kernels/decode_attn`` contract. The Pallas flavor is the same
+    dataflow compiled for accelerators; on this CPU host it only
+    *interprets* (a per-grid-step Python harness), so its wall is
+    recorded per row as ``pallas_interpret_wall_us`` for visibility —
+    a parity artifact, not a perf claim.
+
+What the kernel path eliminates at these swept points is exactly what
+the Pallas kernel eliminates structurally on an accelerator: the
+``[B, S-kv_len, ...]`` dead-padding compute (blocks past the wave's max
+position) and the ``q_per_kv``-fold K/V head expansion.
+
+Methodology (same as kernels_bench, documented in the JSON meta):
+adjacent paired windows with the per-pair ratio median (host noise
+epochs hit both modes of a pair), per-mode median walls,
+single-threaded-eigen XLA set before the first jax import, fallback
+counters recorded per row.
+
+Emits ``BENCH_decode_attn.json`` via ``python -m benchmarks.run --mode
+decode-attn``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+# must happen before jax initializes its CPU client
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax
+import numpy as np
+
+SEQ_BLOCK = 128      # the pool seq-axis quantum the engine crops to
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def _legacy(q, k, v, pos, *, window):
+    from repro.models.attention import decode_attention_einsum
+    return decode_attention_einsum(q, k, v, pos, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_len"))
+def _kernel_routed(q, k, v, pos, *, window, kv_len):
+    # mirrors the engine: crop the pooled cache read to the wave's
+    # block-aligned valid prefix INSIDE jit, then the grouped ref flavor
+    from repro.kernels.registry import REF
+    from repro.models.attention import decode_attention
+    return decode_attention(q, k[:, :kv_len], v[:, :kv_len], pos,
+                            window=window, spec=REF)
+
+
+def _pallas(q, k, v, pos, window):
+    from repro.kernels.registry import PALLAS_INTERPRET
+    from repro.models.attention import decode_attention
+    return decode_attention(q, k, v, pos, window=window,
+                            spec=PALLAS_INTERPRET)
+
+
+def _window_wall(fn, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def run_sweep(
+    batch_sizes: Sequence[int] = (4, 8),
+    seq_sweep: Sequence[int] = (256, 1024),
+    windows_sweep: Sequence[int] = (0, 64),
+    gqa_sweep: Sequence = ((8, 1), (2, 4), (1, 8)),   # (KV, q_per_kv), H=8
+    d_head: int = 64,
+    iters: int = 10,
+    windows: int = 5,
+) -> List[Dict[str, object]]:
+    import jax.numpy as jnp
+
+    from repro.kernels import registry
+
+    rng = np.random.default_rng(0)
+    rows: List[Dict[str, object]] = []
+    for S in seq_sweep:
+        for B in batch_sizes:
+            for win in windows_sweep:
+                for KV, qkv in gqa_sweep:
+                    H = KV * qkv
+                    q = jnp.asarray(rng.normal(size=(B, 1, H, d_head)),
+                                    jnp.float32)
+                    k = jnp.asarray(rng.normal(size=(B, S, KV, d_head)),
+                                    jnp.float32)
+                    v = jnp.asarray(rng.normal(size=(B, S, KV, d_head)),
+                                    jnp.float32)
+                    # ragged steady-state fill: 1/8 .. 1/2 of the pool
+                    pos_np = rng.integers(S // 8, S // 2, size=(B,))
+                    pos = jnp.asarray(pos_np, jnp.int32)
+                    kv_len = min(
+                        -(-(int(pos_np.max()) + 1) // SEQ_BLOCK) * SEQ_BLOCK,
+                        S)
+                    registry.reset_warnings()
+                    legacy = lambda: _legacy(q, k, v, pos, window=win)
+                    routed = lambda: _kernel_routed(q, k, v, pos, window=win,
+                                                    kv_len=kv_len)
+                    pal = lambda: _pallas(q, k, v, pos, win)
+                    legacy(); routed()                     # compile
+                    pal_t = [_window_wall(pal, 1) for _ in range(4)][1:]
+                    walls = {"legacy": [], "kernel": []}
+                    for _ in range(windows):   # adjacent paired windows
+                        walls["legacy"].append(_window_wall(legacy, iters))
+                        walls["kernel"].append(_window_wall(routed, iters))
+                    speedup = float(np.median(
+                        [lg / kr for lg, kr in zip(walls["legacy"],
+                                                   walls["kernel"])]))
+                    row = dict(
+                        batch=B, seq=S, window=win, kv_heads=KV,
+                        q_per_kv=qkv, d_head=d_head, kv_len=kv_len,
+                        max_pos=int(pos_np.max()),
+                        legacy_wall_us=float(
+                            np.median(walls["legacy"])) / iters * 1e6,
+                        kernel_wall_us=float(
+                            np.median(walls["kernel"])) / iters * 1e6,
+                        pallas_interpret_wall_us=float(
+                            np.median(pal_t)) * 1e6,
+                        pallas_fallbacks=registry.fallback_count(),
+                        speedup=speedup,
+                    )
+                    rows.append(row)
+                    print(f"B={B} S={S} win={win} KV={KV}x{qkv}: kernel "
+                          f"{row['kernel_wall_us']:.0f}us vs legacy "
+                          f"{row['legacy_wall_us']:.0f}us "
+                          f"({speedup:.2f}x; kv_len {kv_len})")
+    return rows
+
+
+def main(out_path: str = "BENCH_decode_attn.json") -> None:
+    rows = run_sweep()
+    worse = [r for r in rows if r["speedup"] < 1.0]
+    meta = dict(
+        note="kernel = the routed decode-attn path as the serve engine "
+             "runs it on this CPU host (cache read cropped in-jit to the "
+             "wave's 128-aligned valid prefix + grouped einsum over the "
+             "KV-head axis, backend='ref' — the CPU serving flavor of "
+             "kernels/decode_attn); legacy = decode_attention_einsum "
+             "(full padded seq axis + _repeat_kv head expansion), the "
+             "parity oracle. Same XLA CPU backend both sides. speedup = "
+             "median of adjacent paired-window ratios (cancels host "
+             "noise epochs); walls are per-mode medians; single-"
+             "threaded-eigen XLA. pallas_interpret_wall_us records the "
+             "Pallas flavor under the CPU interpret harness (parity "
+             "mode, not a perf claim; compiled on accelerators). Rows "
+             "use ragged 1/8..1/2 pool fill — the continuous-batching "
+             "steady state the length-aware kernel targets.",
+        seq_block=SEQ_BLOCK,
+        points=len(rows),
+        kernel_never_slower=not worse,
+    )
+    with open(out_path, "w") as f:
+        json.dump(dict(meta=meta, rows=rows), f, indent=2)
+    print(f"wrote {out_path} ({len(rows)} rows; "
+          f"kernel_never_slower={not worse})")
+    if worse:
+        for r in worse:
+            print(f"  REGRESSION: B={r['batch']} S={r['seq']} "
+                  f"win={r['window']} KV={r['kv_heads']}x{r['q_per_kv']} "
+                  f"speedup={r['speedup']:.2f}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    main()

@@ -15,6 +15,11 @@ per-pool step breakdown (see benchmarks/serve_bench.py).
 against the staged per-shard pipeline over (batch, db size, nprobe,
 shards) and writes ``BENCH_kernels.json`` with the per-stage breakdown
 (see benchmarks/kernels_bench.py).
+
+``--mode decode-attn`` sweeps the length-aware decode-attention path
+against the legacy full-seq einsum over (batch, pool seq, window, GQA
+ratio) and writes ``BENCH_decode_attn.json`` (see
+benchmarks/decode_attn_bench.py).
 """
 from __future__ import annotations
 
@@ -27,15 +32,21 @@ def main() -> None:
     sys.path.insert(0, "src")
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
-                    choices=["figures", "retrieval", "serve", "kernels"],
+                    choices=["figures", "retrieval", "serve", "kernels",
+                             "decode-attn"],
                     default="figures")
     ap.add_argument("--out", default=None,
-                    help="output path for --mode retrieval/serve/kernels")
+                    help="output path for the sweep modes")
     args = ap.parse_args()
 
     if args.mode == "retrieval":
         from benchmarks import retrieval_bench
         retrieval_bench.main(args.out or "BENCH_retrieval.json")
+        return
+
+    if args.mode == "decode-attn":
+        from benchmarks import decode_attn_bench
+        decode_attn_bench.main(args.out or "BENCH_decode_attn.json")
         return
 
     if args.mode == "kernels":

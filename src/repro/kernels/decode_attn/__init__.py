@@ -1,0 +1,11 @@
+"""Fused Pallas decode-attention over a slotted / padded KV cache.
+
+``ops.pallas_decode_attention`` is the registry-routed frontend;
+``kernel.fused_decode_attention`` the Pallas kernel; ``ref`` the
+grouped-einsum oracle (also the CPU serving flavor). The public entry
+point is ``repro.models.attention.decode_attention(spec=...)``.
+"""
+from repro.kernels.decode_attn.ops import pallas_decode_attention
+from repro.kernels.decode_attn.ref import ref_decode_attention
+
+__all__ = ["pallas_decode_attention", "ref_decode_attention"]

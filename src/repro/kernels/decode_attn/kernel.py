@@ -1,0 +1,152 @@
+"""Pallas kernel: streaming decode-attention over the slotted KV pool.
+
+The legacy decode path materializes GQA-expanded K/V to ``[B, S, H, D]``
+and a full ``[B, H, 1, S]`` score row over the *entire padded pool seq
+axis* every step. This kernel is the dataflow-faithful replacement (the
+LM-side twin of ``chamvs_scan``'s streaming K-selection):
+
+  * grid ``(B // tile_b, S // blk)`` — the trailing **kv-block axis** is
+    the streaming axis: each step pulls one ``[tile_b, blk, KV, D]``
+    K/V block HBM->VMEM and folds it into an online-softmax accumulator
+    carried in the *output refs* (their index_map ignores the kv-block
+    index, the same scratch-residency trick ``chamvs_scan`` uses for
+    its running top-k'), so the ``[B, H, S]`` score row never exists;
+  * **GQA-native**: queries arrive pre-grouped as ``[B, KV, G, D]`` and
+    scores contract directly against the KV-head axis — no
+    ``_repeat_kv`` materialization anywhere;
+  * **length-aware**: per-block validity is derived from each row's
+    absolute ``position`` (linear slot ``i`` holds position ``i``; ring
+    slot ``i`` holds ``pos - ((pos - i) mod S)``; sliding ``window``
+    masks on top), and a whole kv block is **skipped** — zero FLOPs,
+    accumulators untouched — when every slot in it is invalid for every
+    row in the tile: blocks past the tile's max position, and (linear
+    caches with a window) blocks wholly below the tile's min window
+    edge. Short sequences in a ragged wave therefore stop paying for
+    the pool's ``max_seq`` padding.
+
+Both validity families reduce to the same skip predicate
+``block_start > max(position)`` (a ring slot ``i`` is invalid exactly
+when ``i > pos`` while the ring has not wrapped, and never invalid
+after it wraps — at which point ``max(position) >= S - 1`` keeps every
+block live).
+
+Validated against the grouped ``ref`` oracle and the legacy einsum path
+in ``tests/test_decode_attn.py`` (hypothesis property test). The
+in-kernel einsums lower via ``dot_general`` with (row, kv-head) batch
+dims; on the CPU containers this runs in interpret mode (parity
+harness), compiled on a real accelerator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref,
+                        out_ref, m_ref, l_ref, *,
+                        blk: int, s_real: int, window: int, ring: bool):
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[:, 0]                                   # [tile_b]
+    start = j * blk
+    # tile-level skip: every slot in this block invalid for every row
+    live = start <= jnp.max(pos)
+    if window > 0 and not ring:
+        # linear cache + sliding window: blocks wholly below the tile's
+        # min window edge are dead too (the window slid past them)
+        live = jnp.logical_and(live, start + blk - 1 > jnp.min(pos) - window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[...].astype(jnp.float32)                # [tile_b,KV,G,D]
+        k = k_ref[...].astype(jnp.float32)                # [tile_b,blk,KV,D]
+        v = v_ref[...].astype(jnp.float32)
+        scale = q.shape[-1] ** -0.5
+        s = jnp.einsum("bkgd,bskd->bkgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        tile_b = pos.shape[0]
+        slot = start + jax.lax.broadcasted_iota(jnp.int32, (tile_b, blk), 1)
+        if ring:
+            p_slot = pos[:, None] - ((pos[:, None] - slot) % s_real)
+            valid = p_slot >= 0
+        else:
+            p_slot = slot
+            valid = p_slot <= pos[:, None]
+        if window > 0:
+            valid &= p_slot > pos[:, None] - window
+        vmask = valid[:, None, None, :]                   # [tile_b,1,1,blk]
+        s = jnp.where(vmask, s, NEG_INF)
+        m_prev = m_ref[...]                               # [tile_b,KV,G]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(vmask, jnp.exp(s - m_new[..., None]), 0.0)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        pv = jnp.einsum("bkgs,bskd->bkgd", p, v,
+                        preferred_element_type=jnp.float32)
+        out_ref[...] = out_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _final():
+        out_ref[...] = out_ref[...] / jnp.maximum(
+            l_ref[...][..., None], 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "ring", "tile_b",
+                                             "blk", "interpret"))
+def fused_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, position: jnp.ndarray,
+                           window: int = 0, ring: bool = False,
+                           tile_b: int = 1, blk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """One streaming dispatch for a whole decode wave.
+
+    q [B, 1, H, D] | k_cache/v_cache [B, S, KV, D] | position [B] int32
+    -> [B, 1, H, D]. ``tile_b`` must divide B and ``blk`` must divide S
+    (the frontend picks legal tiles via the registry heuristics).
+    """
+    B, S, KV, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    assert B % tile_b == 0 and S % blk == 0, (B, tile_b, S, blk)
+    qg = q[:, 0].reshape(B, KV, G, D)
+    pos = jnp.asarray(position, jnp.int32).reshape(B, 1)
+    kernel = functools.partial(_decode_attn_kernel, blk=blk, s_real=S,
+                               window=window, ring=ring)
+    grid = (B // tile_b, S // blk)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, KV, G, D), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((tile_b, blk, KV, D), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((tile_b, blk, KV, D), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=(
+            # index_map ignores j: the online-softmax state (acc, m, l)
+            # is carried in the output refs across the kv-block axis
+            pl.BlockSpec((tile_b, KV, G, D), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((tile_b, KV, G), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tile_b, KV, G), lambda i, j: (i, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, KV, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ),
+        interpret=interpret,
+    )(pos, qg, k_cache, v_cache)
+    return out.reshape(B, 1, H, D).astype(v_cache.dtype)

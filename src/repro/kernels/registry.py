@@ -37,7 +37,7 @@ import dataclasses
 import warnings
 from typing import Dict, Optional, Tuple
 
-_BACKENDS = ("pallas", "ref")
+_BACKENDS = ("pallas", "ref", "einsum")
 _FALLBACK_POLICIES = ("warn", "silent", "error")
 
 
@@ -52,9 +52,14 @@ class KernelSpec:
     """How a ChamVS kernel call should execute.
 
     Hashable and frozen, so it can ride through ``jax.jit`` as a static
-    argument (``ChamVSConfig`` embeds one per search config)."""
+    argument (``ChamVSConfig`` embeds one per search config, the serve
+    ``RalmEngine`` one per deployment for decode attention).
 
-    backend: str = "pallas"        # "pallas" | "ref"
+    ``backend="einsum"`` exists for ``decode_attn`` only: the legacy
+    full-materialization einsum path kept as the parity oracle. The
+    ChamVS frontends treat any non-"pallas" backend as "ref"."""
+
+    backend: str = "pallas"        # "pallas" | "ref" | "einsum"
     interpret: bool = True         # Pallas interpret mode (CPU containers)
     tile_q: Optional[int] = None   # query-tile rows (None = heuristic)
     tile_n: Optional[int] = None   # scan-axis tile (None = heuristic)
@@ -99,6 +104,14 @@ class KernelSpec:
         """Scan-axis tile for the streaming ADC kernels."""
         tile = self.tile_n if self.tile_n is not None else 512
         return min(tile, max(128, n))
+
+    def pick_block_seq(self, s: int) -> int:
+        """KV-block length for the streaming decode-attention kernel:
+        the largest divisor of the cache seq axis <= ``tile_n`` (default
+        128 — one pool seq-alignment quantum). The grid streams one such
+        block per step, so this is also the skip granularity."""
+        want = self.tile_n if self.tile_n is not None else 128
+        return self._divisor_at_most(s, want)
 
     def with_overrides(self, backend: Optional[str] = None,
                        interpret: Optional[bool] = None) -> "KernelSpec":

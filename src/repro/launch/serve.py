@@ -68,6 +68,18 @@ def main() -> None:
                     help="per-shard staged scan pipeline (one chamvs "
                          "dispatch per shard; the parity oracle) instead "
                          "of the fused single-dispatch chamvs_scan")
+    ap.add_argument("--attn-kernel", choices=["ref", "pallas", "einsum"],
+                    default=None,
+                    help="wave decode-attention kernel: ref = grouped "
+                         "einsum over the KV-head axis (default, the CPU "
+                         "serving flavor), pallas = the streaming "
+                         "decode_attn kernel (pair with --no-interpret "
+                         "on a real accelerator), einsum = the legacy "
+                         "full-materialization oracle")
+    ap.add_argument("--attn-seq-block", type=int, default=16,
+                    help="KV-pool seq-axis alignment quantum: per-wave "
+                         "attention reads crop to this multiple of the "
+                         "valid prefix instead of the padded max_seq")
     args = ap.parse_args()
 
     from repro.models import transformer as tf
@@ -94,7 +106,11 @@ def main() -> None:
                            kernel_interpret=(False if args.no_interpret
                                              else None),
                            kernel_fused=(False if args.staged_scan
-                                         else None))
+                                         else None),
+                           attn_backend=args.attn_kernel,
+                           attn_interpret=(False if args.no_interpret
+                                           else None),
+                           attn_seq_block=args.attn_seq_block)
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -124,6 +140,11 @@ def main() -> None:
               f"(high water {ps.high_water}), {ps.waves} waves avg "
               f"{ps.mean_wave():.1f} rows -> {engine.decode_dispatches} "
               f"LM dispatches, buckets {sorted(ps.buckets)}")
+        print(f"[serve] decode attn [{engine.attn_spec.backend}]: "
+              f"{ps.blocks_skipped}/{ps.blocks_total} seq blocks skipped "
+              f"({ps.skip_fraction():.0%} of pool padding), "
+              f"{ps.decode_compiles} decode graphs "
+              f"(seq block {engine.pool.seq_block})")
     service = getattr(engine.retriever, "service", None)
     if service is not None:
         st = service.stats

@@ -1,20 +1,33 @@
 """Attention: GQA with full / sliding-window masks.
 
-Three execution paths:
+Execution paths:
   * ``flash_attention`` — blocked online-softmax over (q-block, kv-block)
     tiles via ``lax.scan`` so the [T, S] score matrix is never materialized
     (required: train_4k batch 256 and prefill_32k would otherwise allocate
     TB-scale score tensors). This is the pure-JAX analogue of a Pallas/TPU
     flash kernel and is what the dry-run lowers.
   * ``naive_attention`` — direct softmax(QK^T)V oracle for tests.
-  * ``decode_attention`` — one new token against a KV cache (full or ring).
+  * ``decode_attention`` — one new token against a KV cache (full or ring),
+    spec-routed through the kernel registry: ``backend="ref"`` (default)
+    is the grouped-einsum path that contracts the KV-head axis directly,
+    ``backend="pallas"`` the streaming ``kernels/decode_attn`` kernel
+    (online softmax over kv blocks, skips blocks past each row tile's
+    max valid position), ``backend="einsum"`` the legacy
+    full-materialization path kept as the parity oracle
+    (``decode_attention_einsum``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
+from repro.kernels.decode_attn.ops import pallas_decode_attention
+from repro.kernels.decode_attn.ref import (decode_validity,
+                                           ref_decode_attention)
 from repro.models.ctx import constrain, kv_tags
 
 NEG_INF = -1e30
@@ -275,7 +288,8 @@ _flash_fwd_stats.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
 def decode_attention(q, k_cache, v_cache, position, window=0,
-                     ring: bool = False):
+                     ring: bool = False,
+                     spec: Optional[registry.KernelSpec] = None):
     """One-token decode. q [B,1,H,D]; caches [B,S,KV,D]; position [B] int32.
 
     The batch rows are independent: ``position`` is per-row, and every row
@@ -285,33 +299,58 @@ def decode_attention(q, k_cache, v_cache, position, window=0,
 
     ``ring=True`` means the cache is a sliding ring buffer of size S=window:
     slot i holds absolute position p_i = pos - ((pos - i) mod S); otherwise
-    slot i holds absolute position i and validity is i <= pos."""
+    slot i holds absolute position i and validity is i <= pos.
+
+    ``spec`` selects the execution path (see the module docstring). The
+    default is ``backend="ref"`` — the grouped-einsum path, the right
+    flavor for CPU hosts where Pallas only interprets — NOT the
+    registry-wide pallas default; accelerator deployments opt into the
+    streaming kernel via ``EngineConfig.attn_backend="pallas"``."""
+    spec = registry.resolve("decode_attn", spec, default=registry.REF)
+    if spec.backend == "einsum":
+        return decode_attention_einsum(q, k_cache, v_cache, position,
+                                       window=window, ring=ring)
+    tags = kv_tags()
+    constrain_scores = None
+    if tags is not None:
+        # keep the softmax DISTRIBUTED over the seq-sharded cache: without
+        # these hints GSPMD all-gathers the full cache per TP column
+        # (measured f32 1.1 GB/layer, EXPERIMENTS.md §Perf iteration 4)
+        kb, ks = tags
+        k_cache = constrain(k_cache, kb, ks, None, None)
+        v_cache = constrain(v_cache, kb, ks, None, None)
+        # grouped scores are [B, KV, G, T, S]: batch tag on dim 0, the
+        # seq-sharded axis on dim 4 — same invariant the einsum oracle
+        # pins on its [B, H, T, S] row
+        constrain_scores = lambda s: constrain(s, kb, None, None, None, ks)
+    if spec.backend == "pallas":
+        return pallas_decode_attention(q, k_cache, v_cache, position,
+                                       window=window, ring=ring, spec=spec)
+    return ref_decode_attention(q, k_cache, v_cache, position,
+                                window=window, ring=ring,
+                                constrain_scores=constrain_scores)
+
+
+def decode_attention_einsum(q, k_cache, v_cache, position, window=0,
+                            ring: bool = False):
+    """The legacy decode path, kept verbatim as the parity oracle: GQA
+    heads expanded via ``_repeat_kv`` to [B,S,H,D] and one full
+    [B,H,1,S] score row over the entire padded seq axis. Every other
+    flavor (grouped ref, streaming Pallas) must match it token-for-token
+    under greedy serving (tests/test_decode_attn.py)."""
     B, S, KV, D = k_cache.shape
     H = q.shape[2]
     k = _repeat_kv(k_cache, H // KV)
     v = _repeat_kv(v_cache, H // KV)
     tags = kv_tags()
     if tags is not None:
-        # keep the softmax DISTRIBUTED over the seq-sharded cache: without
-        # these hints GSPMD all-gathers the full cache per TP column
-        # (measured f32 1.1 GB/layer, EXPERIMENTS.md §Perf iteration 4)
         kb, ks = tags
         k = constrain(k, kb, ks, None, None)
         v = constrain(v, kb, ks, None, None)
     s = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * D ** -0.5
     if tags is not None:
         s = constrain(s, tags[0], None, None, tags[1])
-    slot = jnp.arange(S)
-    if ring:
-        p_slot = position[:, None] - ((position[:, None] - slot[None]) % S)
-        valid = p_slot >= 0
-        if window > 0:
-            valid &= p_slot > position[:, None] - window
-    else:
-        p_slot = jnp.broadcast_to(slot[None], (B, S))
-        valid = p_slot <= position[:, None]
-        if window > 0:
-            valid &= p_slot > position[:, None] - window
+    valid = decode_validity(position, S, window, ring)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhts,bshd->bthd", w.astype(v.dtype), v)

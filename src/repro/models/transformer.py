@@ -189,13 +189,22 @@ def _proj_qkv(cfg, p, x):
     return q, k, v
 
 
-def _self_attention(cfg, p, h, positions, mode, cache, window, slots=None):
+def _self_attention(cfg, p, h, positions, mode, cache, window, slots=None,
+                    kv_len=None, attn_spec=None):
     """Returns (attn_out [B,T,d], new_cache).
 
     ``slots`` enables the batched-slot (KV-pool) decode path: the cache
     carries ``P`` pooled rows, ``h`` carries a wave of ``W`` active rows,
     and row ``w`` reads/writes pool row ``slots[w]``. New K/V are written
-    at O(W) scatter cost; attention reads gather each wave row's slot."""
+    at O(W) scatter cost; attention reads gather each wave row's slot.
+
+    ``kv_len`` (static int) crops the attention read of full-length
+    caches to the wave's block-aligned valid prefix — the engine derives
+    it from the wave's max position on the host, so a ragged wave stops
+    paying for the pool's ``max_seq`` padding (slots past every row's
+    position carry exactly-zero weight, so cropping them is a no-op on
+    the math). Ring caches are window-sized already and are never
+    cropped. ``attn_spec`` picks the decode-attention kernel flavor."""
     B, T, _ = h.shape
     q, k, v = _proj_qkv(cfg, p, h)
     pos1d = positions[0] if positions.ndim == 3 else positions
@@ -206,10 +215,16 @@ def _self_attention(cfg, p, h, positions, mode, cache, window, slots=None):
     if mode == "decode":
         kc, vc = update_cache(cache["k"], cache["v"], k, v,
                               pos1d[:, 0], ring=ring, slots=slots)
-        k_att = kc if slots is None else kc[slots]
-        v_att = vc if slots is None else vc[slots]
+        # crop BEFORE the slot gather: the gather then copies only the
+        # valid-prefix blocks, not the pool's full padded seq axis —
+        # at long max_seq the full-S gather dominates the whole step
+        kc_r, vc_r = kc, vc
+        if kv_len is not None and not ring and kv_len < kc.shape[1]:
+            kc_r, vc_r = kc[:, :kv_len], vc[:, :kv_len]
+        k_att = kc_r if slots is None else kc_r[slots]
+        v_att = vc_r if slots is None else vc_r[slots]
         out = decode_attention(q, k_att, v_att, pos1d[:, 0], window=window,
-                               ring=ring)
+                               ring=ring, spec=attn_spec)
         new_cache = dict(cache, k=kc, v=vc)
     else:
         out = flash_attention(q, k, v, pos1d, pos1d, causal=True,
@@ -259,7 +274,8 @@ def _ffn(cfg, p, x):
 
 def apply_block(cfg: ModelConfig, p: Params, h: jnp.ndarray,
                 positions: jnp.ndarray, mode: str, cache: Optional[Params],
-                window: int, enc_states=None, slots=None):
+                window: int, enc_states=None, slots=None, kv_len=None,
+                attn_spec=None):
     """One layer. Returns (h, new_cache).
 
     With ``slots`` (batched-slot decode over a KV-cache pool) the cache
@@ -296,7 +312,8 @@ def apply_block(cfg: ModelConfig, p: Params, h: jnp.ndarray,
     attn_out, new_cache = _self_attention(cfg, p, hn, positions, mode,
                                           cache if cache is not None else
                                           dict(k=None, v=None), window,
-                                          slots=slots)
+                                          slots=slots, kv_len=kv_len,
+                                          attn_spec=attn_spec)
     if cache is None:
         new_cache = None
     if cfg.block == "hybrid":
@@ -333,14 +350,16 @@ def apply_block(cfg: ModelConfig, p: Params, h: jnp.ndarray,
 def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
                 positions: jnp.ndarray, mode: str,
                 caches: Optional[Params] = None, enc_states=None,
-                remat: bool = False, slots=None
-                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+                remat: bool = False, slots=None, kv_len=None,
+                attn_spec=None) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Apply all n_layers in order. Layers are grouped by the static
     ``layer_pattern`` cycle; a lax.scan over whole cycles keeps HLO small.
 
     ``slots`` (decode only): the caches are a KV-cache pool of ``P`` slot
     rows while ``h`` is one wave of ``W`` active rows — see
-    ``decode_wave``. The scan carry stays pool-shaped throughout."""
+    ``decode_wave``. The scan carry stays pool-shaped throughout.
+    ``kv_len``/``attn_spec`` are static decode-attention knobs (see
+    ``_self_attention``) applied uniformly to every full-cache layer."""
     pattern = cfg.layer_pattern
     period = len(pattern)
     n_full, tail = divmod(cfg.n_layers, period)
@@ -370,7 +389,8 @@ def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
             cache = (jax.tree.map(lambda a: a[idx], caches_["classes"][cls])
                      if caches_ is not None else None)
             h, new_cache = apply_block(cfg, p, h, positions, mode, cache,
-                                       window, enc_states, slots=slots)
+                                       window, enc_states, slots=slots,
+                                       kv_len=kv_len, attn_spec=attn_spec)
             if caches_ is not None:
                 upd = jax.tree.map(
                     lambda a, nc: jax.lax.dynamic_update_index_in_dim(
@@ -392,7 +412,8 @@ def apply_stack(cfg: ModelConfig, classes_params: Params, h: jnp.ndarray,
         cache = (jax.tree.map(lambda a: a[idx], caches["classes"][cls])
                  if caches is not None else None)
         h, new_cache = apply_block(cfg, p, h, positions, mode, cache, window,
-                                   enc_states, slots=slots)
+                                   enc_states, slots=slots, kv_len=kv_len,
+                                   attn_spec=attn_spec)
         if caches is not None:
             upd = jax.tree.map(
                 lambda a, nc: jax.lax.dynamic_update_index_in_dim(
@@ -460,7 +481,8 @@ def forward(params: Params, cfg: ModelConfig,
             mode: str = "train",
             caches: Optional[Params] = None,
             enc_states: Optional[jnp.ndarray] = None,
-            remat: bool = False, return_hidden: bool = False, slots=None):
+            remat: bool = False, return_hidden: bool = False, slots=None,
+            kv_len=None, attn_spec=None):
     """Full forward. Provide `tokens` [B,T] or `embeds` [B,T,d] (modality
     stubs). Returns (logits [B,T,V], caches[, hidden])."""
     h = embed_tokens(params, tokens) if embeds is None else embeds
@@ -469,7 +491,8 @@ def forward(params: Params, cfg: ModelConfig,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
     h, caches = apply_stack(cfg, params["classes"], h, positions, mode,
-                            caches, enc_states, remat=remat, slots=slots)
+                            caches, enc_states, remat=remat, slots=slots,
+                            kv_len=kv_len, attn_spec=attn_spec)
     h = constrain(h, "dp", None, None)
     logits = unembed(params, cfg, h)
     if return_hidden:
@@ -480,7 +503,7 @@ def forward(params: Params, cfg: ModelConfig,
 def decode_step(params: Params, cfg: ModelConfig, caches: Params,
                 token: jnp.ndarray, position: jnp.ndarray,
                 enc_states: Optional[jnp.ndarray] = None,
-                return_hidden: bool = False):
+                return_hidden: bool = False, attn_spec=None):
     """One serving step. token [B,1] int32; position [B] int32.
     Returns (logits [B,V], new caches[, hidden [B,d]]). The hidden state is
     the RALM retrieval query (paper step 1, kNN-LM style)."""
@@ -490,7 +513,7 @@ def decode_step(params: Params, cfg: ModelConfig, caches: Params,
         pos = jnp.broadcast_to(pos[None], (3, B, 1))
     out = forward(params, cfg, tokens=token, positions=pos, mode="decode",
                   caches=caches, enc_states=enc_states,
-                  return_hidden=return_hidden)
+                  return_hidden=return_hidden, attn_spec=attn_spec)
     if return_hidden:
         logits, caches, h = out
         return logits[:, 0], caches, h[:, 0]
@@ -502,7 +525,7 @@ def decode_wave(params: Params, cfg: ModelConfig, caches: Params,
                 token: jnp.ndarray, slots: jnp.ndarray,
                 position: jnp.ndarray,
                 enc_states: Optional[jnp.ndarray] = None,
-                return_hidden: bool = False):
+                return_hidden: bool = False, kv_len=None, attn_spec=None):
     """One serving step for a whole wave over a slotted KV-cache pool.
 
     ``caches`` hold ``P`` pooled slot rows (built with
@@ -510,6 +533,11 @@ def decode_wave(params: Params, cfg: ModelConfig, caches: Params,
     ``position`` [W] describe the wave: row ``w`` advances the sequence
     living in pool slot ``slots[w]`` at absolute position ``position[w]``.
     ``enc_states`` (encdec) is already gathered to wave rows [W, S, d].
+
+    ``kv_len`` (static) crops every full-cache attention read to the
+    wave's block-aligned valid prefix; ``attn_spec`` selects the
+    decode-attention kernel (grouped ref / streaming Pallas / legacy
+    einsum oracle) — see ``models/attention.decode_attention``.
 
     Returns (logits [W,V], new pool caches[, hidden [W,d]]). One call =
     one LM dispatch for every active sequence, regardless of how many
@@ -521,7 +549,8 @@ def decode_wave(params: Params, cfg: ModelConfig, caches: Params,
         pos = jnp.broadcast_to(pos[None], (3, W, 1))
     out = forward(params, cfg, tokens=token, positions=pos, mode="decode",
                   caches=caches, enc_states=enc_states, slots=slots,
-                  return_hidden=return_hidden)
+                  return_hidden=return_hidden, kv_len=kv_len,
+                  attn_spec=attn_spec)
     if return_hidden:
         logits, caches, h = out
         return logits[:, 0], caches, h[:, 0]

@@ -107,6 +107,23 @@ class EngineConfig:
     #                                      ONE chamvs_scan dispatch per
     #                                      retrieval wave (True) vs the
     #                                      staged per-shard oracle (False)
+    attn_backend: Optional[str] = None   # wave decode-attention kernel:
+    #                                      None/"ref" = grouped einsum
+    #                                      over the KV-head axis (CPU
+    #                                      serving flavor), "pallas" =
+    #                                      the streaming decode_attn
+    #                                      kernel, "einsum" = the legacy
+    #                                      full-materialization oracle
+    attn_interpret: Optional[bool] = None  # Pallas interpret mode for
+    #                                      the decode-attn kernel (CPU
+    #                                      containers need True)
+    attn_seq_block: int = 16             # KV-pool seq-axis alignment:
+    #                                      per-wave attention reads crop
+    #                                      to this quantum (kv_len), so
+    #                                      ragged waves skip the pool's
+    #                                      max_seq padding; bounds the
+    #                                      extra decode-graph variants
+    #                                      at max_seq / attn_seq_block
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.compat import use_mesh
 from repro.core import rag as rag_lib
+from repro.kernels import registry
 from repro.core.chamvs import ChamVSConfig
 from repro.core.ivfpq import IVFPQParams, IVFPQShard
 from repro.core.rag import RagConfig
@@ -102,25 +103,32 @@ def _prefill(params, cfg: ModelConfig, rag: RagConfig,
     return caches, enc_states, last_logits, last_hidden
 
 
-@functools.partial(jax.jit, static_argnums=1)
+@functools.partial(jax.jit, static_argnums=1,
+                   static_argnames=("attn_spec",))
 def _jit_decode(params, cfg: ModelConfig, caches, token, position,
-                enc_states):
+                enc_states, *, attn_spec=None):
     """One shared jit cache for all backends/engines (``cfg`` is frozen
     and hashable), so repeatedly constructing engines — e.g. the
     ``generate()`` compat shim — never re-traces decode_step."""
     return tf.decode_step(params, cfg, caches, token, position,
-                          enc_states=enc_states, return_hidden=True)
+                          enc_states=enc_states, return_hidden=True,
+                          attn_spec=attn_spec)
 
 
-@functools.partial(jax.jit, static_argnums=1, donate_argnums=(2,))
+@functools.partial(jax.jit, static_argnums=1, donate_argnums=(2,),
+                   static_argnames=("kv_len", "attn_spec"))
 def _jit_decode_wave(params, cfg: ModelConfig, caches, token, slots,
-                     position, enc_states):
+                     position, enc_states, *, kv_len=None, attn_spec=None):
     """One dispatch per wave over the slotted KV-cache pool. The pool
     caches are donated: the per-layer K/V writes land in place, so step
     cost is O(wave), not O(pool). Shared jit cache across engines, keyed
-    on (cfg, wave bucket, pool shape)."""
+    on (cfg, wave bucket, pool shape, kv_len, attn_spec) — ``kv_len`` is
+    the wave's block-aligned valid prefix (attention reads crop to it,
+    see ``KVCachePool.attn_len``), ``attn_spec`` the static
+    decode-attention kernel selection."""
     return tf.decode_wave(params, cfg, caches, token, slots, position,
-                          enc_states=enc_states, return_hidden=True)
+                          enc_states=enc_states, return_hidden=True,
+                          kv_len=kv_len, attn_spec=attn_spec)
 
 
 class MonolithicBackend:
@@ -137,16 +145,19 @@ class MonolithicBackend:
     def prefill(self, rag: RagConfig, prompt: jnp.ndarray, max_seq: int):
         return _prefill(self.params, self.cfg, rag, prompt, max_seq)
 
-    def decode(self, caches, token, position, enc_states=None):
+    def decode(self, caches, token, position, enc_states=None,
+               attn_spec=None):
         self.decode_dispatches += 1
         return _jit_decode(self.params, self.cfg, caches, token, position,
-                           enc_states)
+                           enc_states, attn_spec=attn_spec)
 
-    def decode_wave(self, caches, token, slots, position, enc_states=None):
+    def decode_wave(self, caches, token, slots, position, enc_states=None,
+                    kv_len=None, attn_spec=None):
         """Advance one wave of pooled slots: token/slots/position [W]."""
         self.decode_dispatches += 1
         return _jit_decode_wave(self.params, self.cfg, caches, token,
-                                slots, position, enc_states)
+                                slots, position, enc_states,
+                                kv_len=kv_len, attn_spec=attn_spec)
 
     def encode_chunks(self, chunks: jnp.ndarray) -> jnp.ndarray:
         """RETRO re-encode of retrieved chunk tokens [B, L] — LM-side
@@ -186,18 +197,21 @@ class DisaggregatedBackend:
         with use_mesh(self.lm_mesh):
             return _prefill(self.params, self.cfg, rag, prompt, max_seq)
 
-    def decode(self, caches, token, position, enc_states=None):
+    def decode(self, caches, token, position, enc_states=None,
+               attn_spec=None):
         self.decode_dispatches += 1
         t0 = time.time()
         with use_mesh(self.lm_mesh):
             logits, caches, hidden = _jit_decode(
-                self.params, self.cfg, caches, token, position, enc_states)
+                self.params, self.cfg, caches, token, position, enc_states,
+                attn_spec=attn_spec)
         if self.times is not None:
             logits.block_until_ready()
             self.times.decode_s.append(time.time() - t0)
         return logits, caches, hidden
 
-    def decode_wave(self, caches, token, slots, position, enc_states=None):
+    def decode_wave(self, caches, token, slots, position, enc_states=None,
+                    kv_len=None, attn_spec=None):
         """One LM-pool dispatch for the whole wave (paper §5: the GPU
         pool batches inference across requests)."""
         self.decode_dispatches += 1
@@ -205,7 +219,7 @@ class DisaggregatedBackend:
         with use_mesh(self.lm_mesh):
             logits, caches, hidden = _jit_decode_wave(
                 self.params, self.cfg, caches, token, slots, position,
-                enc_states)
+                enc_states, kv_len=kv_len, attn_spec=attn_spec)
         if self.times is not None:
             logits.block_until_ready()
             self.times.decode_s.append(time.time() - t0)
@@ -259,14 +273,33 @@ class RalmEngine:
                  rag: Optional[RagConfig] = None,
                  max_seq: Optional[int] = None,
                  max_active: Optional[int] = None,
-                 wave: bool = True, kv_slots: Optional[int] = None):
+                 wave: bool = True, kv_slots: Optional[int] = None,
+                 attn_backend: Optional[str] = None,
+                 attn_interpret: Optional[bool] = None,
+                 attn_seq_block: int = 16):
         """``wave=True`` (default) decodes every active sequence in one
         dispatch per scheduler wave over a slotted ``KVCachePool``;
         ``wave=False`` keeps the per-sequence oracle loop (one dispatch
         per sequence, private caches). ``kv_slots`` fixes the pool
         capacity in rows — admission then defers until completions free
-        slots; ``None`` lets the pool grow on demand."""
+        slots; ``None`` lets the pool grow on demand.
+
+        ``attn_backend`` selects the wave decode-attention kernel:
+        ``"ref"`` (default — grouped einsum over the KV-head axis, the
+        CPU serving flavor), ``"pallas"`` (the streaming
+        ``kernels/decode_attn`` kernel; interpret mode per
+        ``attn_interpret``, default True for CPU containers), or
+        ``"einsum"`` (the legacy full-materialization oracle — "kernel
+        off"). ``attn_seq_block`` is the pool's seq-axis alignment
+        quantum: per wave the engine crops attention reads to the
+        block-aligned valid prefix (``KVCachePool.attn_len``), so short
+        waves stop paying for pool padding at the cost of O(max_seq /
+        attn_seq_block) extra decode-graph variants."""
         self.backend = backend
+        self.attn_spec = registry.KernelSpec(
+            backend=attn_backend if attn_backend is not None else "ref",
+            interpret=True if attn_interpret is None else attn_interpret)
+        self.attn_seq_block = attn_seq_block
         self.retriever = retriever
         self.rag = rag if rag is not None else RagConfig(mode="none")
         self.cfg = backend.cfg
@@ -300,9 +333,14 @@ class RalmEngine:
     def monolithic(cls, params, cfg: ModelConfig, rag: RagConfig,
                    retriever: Optional[Retriever] = None,
                    max_seq: Optional[int] = None, wave: bool = True,
-                   kv_slots: Optional[int] = None) -> "RalmEngine":
+                   kv_slots: Optional[int] = None,
+                   attn_backend: Optional[str] = None,
+                   attn_interpret: Optional[bool] = None,
+                   attn_seq_block: int = 16) -> "RalmEngine":
         return cls(MonolithicBackend(params, cfg), retriever, rag,
-                   max_seq=max_seq, wave=wave, kv_slots=kv_slots)
+                   max_seq=max_seq, wave=wave, kv_slots=kv_slots,
+                   attn_backend=attn_backend, attn_interpret=attn_interpret,
+                   attn_seq_block=attn_seq_block)
 
     @classmethod
     def disaggregated(cls, params, cfg: ModelConfig, rag: RagConfig,
@@ -314,7 +352,10 @@ class RalmEngine:
                       query_proj: Optional[jnp.ndarray] = None,
                       max_seq: Optional[int] = None,
                       measure: bool = True, wave: bool = True,
-                      kv_slots: Optional[int] = None) -> "RalmEngine":
+                      kv_slots: Optional[int] = None,
+                      attn_backend: Optional[str] = None,
+                      attn_interpret: Optional[bool] = None,
+                      attn_seq_block: int = 16) -> "RalmEngine":
         backend = DisaggregatedBackend(params, cfg, lm_devices=lm_devices,
                                        ret_devices=ret_devices,
                                        measure=measure)
@@ -323,7 +364,9 @@ class RalmEngine:
             payload_tokens=payload_tokens, chunk_table=chunk_table,
             query_proj=query_proj)
         return cls(backend, retriever, rag, max_seq=max_seq, wave=wave,
-                   kv_slots=kv_slots)
+                   kv_slots=kv_slots, attn_backend=attn_backend,
+                   attn_interpret=attn_interpret,
+                   attn_seq_block=attn_seq_block)
 
     @classmethod
     def from_config(cls, config: EngineConfig, params, datastore,
@@ -364,7 +407,10 @@ class RalmEngine:
                 lm_devices=config.lm_devices,
                 ret_devices=config.ret_devices, query_proj=query_proj,
                 max_seq=config.max_seq, wave=config.wave_decode,
-                kv_slots=config.kv_slots)
+                kv_slots=config.kv_slots,
+                attn_backend=config.attn_backend,
+                attn_interpret=config.attn_interpret,
+                attn_seq_block=config.attn_seq_block)
         else:
             if config.retrieval_cache > 0 and not config.async_retrieval:
                 import warnings
@@ -387,7 +433,10 @@ class RalmEngine:
                                  retriever=retriever,
                                  max_seq=config.max_seq,
                                  wave=config.wave_decode,
-                                 kv_slots=config.kv_slots)
+                                 kv_slots=config.kv_slots,
+                                 attn_backend=config.attn_backend,
+                                 attn_interpret=config.attn_interpret,
+                                 attn_seq_block=config.attn_seq_block)
         eng.scheduler.max_active = config.max_active
         return eng
 
@@ -422,7 +471,8 @@ class RalmEngine:
                    else max(next_pow2(rows), 8))
             self.pool = KVCachePool(self.cfg, cap,
                                     self.max_seq or need_seq,
-                                    fixed=self.kv_slots is not None)
+                                    fixed=self.kv_slots is not None,
+                                    seq_block=self.attn_seq_block)
         pool = self.pool
         if self.max_seq is None and need_seq > pool.max_seq:
             pool.grow_seq(need_seq)
@@ -477,7 +527,8 @@ class RalmEngine:
         B = seq.cur.shape[0]
         position = jnp.full((B,), seq.t0 + seq.step - 1, jnp.int32)
         logits, seq.caches, hidden = self.backend.decode(
-            seq.caches, seq.cur, position, enc_states=seq.enc_states)
+            seq.caches, seq.cur, position, enc_states=seq.enc_states,
+            attn_spec=self.attn_spec)
         return logits, hidden
 
     def _search(self, queries: jnp.ndarray):
@@ -573,10 +624,17 @@ class RalmEngine:
         positions = np.concatenate(
             [np.full(seq.cur.shape[0], seq.t0 + seq.step - 1, np.int32)
              for _, seq in wave])
+        # the wave's positions are host arrays, so the block-aligned
+        # valid prefix is known before dispatch: attention reads crop to
+        # kv_len instead of the pool's padded max_seq (pad rows sit at
+        # position 0 and never extend it)
+        max_pos = int(positions.max())
         tokens, slots, positions = pool.pad_wave(tokens, slots, positions)
+        kv_len = pool.attn_len(max_pos, bucket=len(slots))
         logits, pool.caches, hidden = self.backend.decode_wave(
             pool.caches, tokens, jnp.asarray(slots),
-            jnp.asarray(positions), enc_states=pool.gather_enc(slots))
+            jnp.asarray(positions), enc_states=pool.gather_enc(slots),
+            kv_len=kv_len, attn_spec=self.attn_spec)
         off = 0
         for i, seq in wave:
             B = seq.cur.shape[0]

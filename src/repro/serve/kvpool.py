@@ -51,9 +51,29 @@ class PoolStats:
     waves: int = 0               # decode waves dispatched
     wave_rows: int = 0           # live rows across all waves
     buckets: set = dataclasses.field(default_factory=set)  # compiled W's
+    # length-aware decode attention (ragged-wave savings + jit churn)
+    blocks_total: int = 0        # seq blocks a full-pool read would touch
+    blocks_skipped: int = 0      # blocks cropped past the wave's max pos
+    compiled: set = dataclasses.field(default_factory=set)
+    #                            # distinct (wave bucket, kv_len,
+    #                            # capacity, max_seq) decode graphs —
+    #                            # the recompile observable; pool shape
+    #                            # is part of the key because growth
+    #                            # events retrace every bucket
 
     def mean_wave(self) -> float:
         return self.wave_rows / self.waves if self.waves else 0.0
+
+    @property
+    def decode_compiles(self) -> int:
+        """Distinct decode-wave graph keys traced so far. Continuous
+        batching must keep this O(log capacity * max_seq/seq_block),
+        not O(waves) — asserted in tests/test_decode_attn.py."""
+        return len(self.compiled)
+
+    def skip_fraction(self) -> float:
+        return (self.blocks_skipped / self.blocks_total
+                if self.blocks_total else 0.0)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -74,15 +94,21 @@ class KVCachePool:
     ``release`` returns them. Index ``capacity`` is the scratch slot."""
 
     def __init__(self, cfg: ModelConfig, capacity: int, max_seq: int,
-                 enc_len: int = 0, fixed: bool = False):
+                 enc_len: int = 0, fixed: bool = False, seq_block: int = 1):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if seq_block < 1:
+            raise ValueError(f"seq_block must be >= 1, got {seq_block}")
         self.cfg = cfg
         self.capacity = capacity
-        self.max_seq = max_seq
+        self.seq_block = seq_block           # seq-axis alignment quantum:
+        #                                      attention reads are cropped
+        #                                      to multiples of this, so the
+        #                                      axis itself must be aligned
+        self.max_seq = self._align(max_seq)
         self.enc_len = enc_len
         self.fixed = fixed                   # no auto-grow when True
-        self.caches = tf.init_cache(cfg, capacity + 1, max_seq,
+        self.caches = tf.init_cache(cfg, capacity + 1, self.max_seq,
                                     enc_len=enc_len)
         self.enc: Optional[jnp.ndarray] = None   # [P+1, S_enc, d], lazy
         self._free: List[int] = list(range(capacity))
@@ -119,6 +145,29 @@ class KVCachePool:
         self.stats.releases += len(slots)
 
     # -- wave shape bucketing ----------------------------------------------
+
+    def _align(self, n: int) -> int:
+        """Round ``n`` up to the pool's seq-block quantum."""
+        b = self.seq_block
+        return -(-n // b) * b
+
+    def attn_len(self, max_pos: int, bucket: int) -> int:
+        """Static attention length for one wave: the block-aligned valid
+        prefix covering every row's position. The engine passes it into
+        the jitted ``decode_wave`` so full-cache attention reads crop to
+        ``kv_len`` instead of the pool's padded ``max_seq`` — the
+        length-aware half of the decode-attention kernel's contract
+        (the kernel's per-row-tile skip refines it further inside one
+        dispatch). Also the bookkeeping point for the ragged-wave
+        savings (``blocks_skipped``) and the jit-churn observable
+        (``compiled`` keys are (wave bucket, kv_len) pairs)."""
+        kv_len = min(self._align(max_pos + 1), self.max_seq)
+        nb_full = self.max_seq // self.seq_block
+        self.stats.blocks_total += nb_full
+        self.stats.blocks_skipped += nb_full - kv_len // self.seq_block
+        self.stats.compiled.add((bucket, kv_len, self.capacity,
+                                 self.max_seq))
+        return kv_len
 
     def bucket(self, n: int) -> int:
         """Pow2 wave-size bucket: bounds jit recompiles under continuous
@@ -205,7 +254,9 @@ class KVCachePool:
     def grow_seq(self, new_max_seq: int) -> None:
         """Extend the sequence axis of full-length (non-ring) K/V leaves
         so longer requests fit. Written prefixes keep their positions
-        (slot i of a full cache always holds absolute position i)."""
+        (slot i of a full cache always holds absolute position i). The
+        new length stays seq-block aligned."""
+        new_max_seq = self._align(new_max_seq)
         if new_max_seq <= self.max_seq:
             return
         delta = new_max_seq - self.max_seq

@@ -7,7 +7,10 @@ sequence one token in two phases:
 
   phase 1 — ONE ``decode_wave`` dispatch advances every active
      sequence over the engine's slotted ``KVCachePool`` (tokens [W],
-     slots [W], positions [W]; W bucketed to powers of two). jax
+     slots [W], positions [W]; W bucketed to powers of two, attention
+     reads cropped to the wave's block-aligned valid prefix ``kv_len``
+     — ``pool.stats.blocks_skipped/blocks_total`` record the ragged-
+     wave savings, ``decode_compiles`` the graph churn). jax
      dispatch is async, so on a disaggregated deployment the wave's
      retrieval (phase 2) overlaps its decode on the other pool — the
      paper's batched GPU pool (§5) plus the multi-process ChamLM overlap

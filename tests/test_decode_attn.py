@@ -1,0 +1,254 @@
+"""The fused Pallas decode-attention kernel (kernels/decode_attn) vs the
+grouped ref oracle vs the legacy einsum path — the LM-side parity
+contract of this repo's decode hot loop (ISSUE 5 acceptance criteria).
+
+Four layers:
+  * hypothesis + parametrized property tests at the attention level:
+    pallas ≡ ref ≡ legacy einsum over random B/S/H/KV/D, ragged
+    positions, ring=True/False, window>0, GQA ratios incl. KV=1 (MQA);
+  * the dispatch-shape claim: the fused ``decode_wave`` graph contains
+    exactly ONE attention ``pallas_call`` per step;
+  * serve-level: greedy outputs token-identical with the kernel on
+    ("pallas") vs off ("einsum" legacy oracle) vs the grouped ref
+    default, and vs the per-sequence oracle loop;
+  * observability: ``PoolStats.blocks_skipped``/``blocks_total`` record
+    the ragged-wave savings and ``decode_compiles`` the jit churn.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import get_arch
+from repro.kernels import registry
+from repro.kernels.decode_attn.kernel import fused_decode_attention
+from repro.kernels.decode_attn.ops import (count_skipped_blocks,
+                                           pallas_decode_attention)
+from repro.kernels.decode_attn.ref import ref_decode_attention
+from repro.models import transformer as tf
+from repro.models.attention import decode_attention, decode_attention_einsum
+from repro.serve import (DatastoreBuilder, KVCachePool, RagConfig,
+                         RalmEngine, RalmRequest)
+
+PALLAS = registry.KernelSpec(backend="pallas", interpret=True)
+
+
+def _case(seed, B, S, KV, qkv, D, ring):
+    rng = np.random.default_rng(seed)
+    H = KV * qkv
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    # ragged: rows at wildly different fill levels; ring positions may
+    # exceed S (wrapped buffer)
+    hi = 3 * S if ring else S - 1
+    pos = jnp.asarray(rng.integers(0, hi + 1, size=(B,)), jnp.int32)
+    return q, k, v, pos
+
+
+def _assert_parity(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 5),            # B
+       st.integers(1, 40),           # S
+       st.sampled_from([1, 2, 4]),   # KV heads
+       st.sampled_from([1, 2, 4]),   # q heads per KV head (1 = MHA-ish,
+       #                               KV=1 & qkv>1 = MQA)
+       st.sampled_from([4, 16]),     # D
+       st.sampled_from([0, 3, 9]),   # window
+       st.booleans(),                # ring
+       st.integers(0, 2 ** 31 - 1))
+def test_pallas_equals_ref_equals_einsum_property(B, S, KV, qkv, D, window,
+                                                  ring, seed):
+    q, k, v, pos = _case(seed, B, S, KV, qkv, D, ring)
+    want = decode_attention_einsum(q, k, v, pos, window, ring)
+    _assert_parity(decode_attention(q, k, v, pos, window, ring), want)
+    _assert_parity(decode_attention(q, k, v, pos, window, ring,
+                                    spec=PALLAS), want)
+
+
+@pytest.mark.parametrize("B,S,KV,qkv,D,window,ring", [
+    (3, 24, 2, 2, 8, 0, False),      # GQA, plain linear cache
+    (4, 33, 4, 1, 16, 0, False),     # MHA, odd seq axis (blk = divisor)
+    (2, 16, 1, 4, 8, 0, False),      # MQA (KV=1)
+    (2, 16, 2, 2, 8, 5, False),      # linear cache + sliding window
+    (2, 8, 2, 2, 8, 0, True),        # ring cache, wrapped positions
+    (2, 8, 2, 2, 8, 8, True),        # ring cache of size == window
+    (5, 20, 3, 2, 4, 7, False),      # non-pow2 everything
+])
+def test_pallas_equals_ref_equals_einsum(B, S, KV, qkv, D, window, ring):
+    """Non-hypothesis grid so parity runs even without hypothesis."""
+    q, k, v, pos = _case(0, B, S, KV, qkv, D, ring)
+    want = decode_attention_einsum(q, k, v, pos, window, ring)
+    _assert_parity(decode_attention(q, k, v, pos, window, ring), want)
+    _assert_parity(decode_attention(q, k, v, pos, window, ring,
+                                    spec=PALLAS), want)
+    _assert_parity(ref_decode_attention(q, k, v, pos, window, ring), want)
+
+
+def test_kernel_tile_sweep():
+    """Explicit (tile_b, blk) combinations must not change results —
+    including blk splits that make whole blocks skippable."""
+    q, k, v, _ = _case(1, 8, 32, 2, 2, 8, False)
+    pos = jnp.asarray([3, 3, 3, 3, 9, 9, 9, 9], jnp.int32)  # short rows
+    want = decode_attention_einsum(q, k, v, pos)
+    for tile_b in (8, 4, 2, 1):
+        for blk in (32, 16, 8, 4):
+            got = fused_decode_attention(q, k, v, pos, tile_b=tile_b,
+                                         blk=blk, interpret=True)
+            _assert_parity(got, want)
+
+
+def test_kernel_skip_arithmetic():
+    """The host-side skip counter mirrors the kernel's tile predicate:
+    short row tiles skip the blocks past their max position."""
+    pos = np.array([3, 3, 3, 3, 17, 17, 17, 17])
+    # tile_b=4: tile 0 (max pos 3) needs 1 of 4 blocks, tile 1 (max pos
+    # 17) needs 3 of 4 -> 4 skipped of 8
+    skipped, total = count_skipped_blocks(pos, S=32, blk=8, tile_b=4)
+    assert (skipped, total) == (4, 8)
+    # one tile of 8 rows (4 blocks): max pos 17 -> skip only the last
+    skipped, total = count_skipped_blocks(pos, S=32, blk=8, tile_b=8)
+    assert (skipped, total) == (1, 4)
+    # window slides past the leading blocks (linear cache)
+    skipped, total = count_skipped_blocks(
+        np.array([30, 30, 31, 31]), S=32, blk=8, tile_b=4, window=4)
+    assert (skipped, total) == (3, 4)
+
+
+def test_multi_token_q_falls_back_to_ref():
+    """T>1 is outside the streaming kernel's contract: routed to the
+    grouped ref with a recorded fallback, same numerics."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 3, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    pos = jnp.asarray([5, 11], jnp.int32)
+    registry.reset_warnings()
+    with pytest.warns(RuntimeWarning, match="decode_attn"):
+        got = pallas_decode_attention(q, k, v, pos, spec=PALLAS)
+    assert registry.fallback_count("decode_attn") == 1
+    _assert_parity(got, ref_decode_attention(q, k, v, pos))
+
+
+def test_decode_wave_graph_has_one_attention_pallas_call():
+    """The structural claim: with the Pallas spec, one fused
+    ``decode_wave`` step contains exactly ONE attention ``pallas_call``
+    (the layer stack is a lax.scan over one grouped body), and none
+    with the ref/einsum specs."""
+    from tests.test_chamvs_scan import _count_pallas_calls
+
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    caches = tf.init_cache(cfg, 5, max_seq=32)     # 4 slots + scratch
+    tok = jnp.zeros((4, 1), jnp.int32)
+    slots = jnp.arange(4, dtype=jnp.int32)
+    pos = jnp.asarray([3, 5, 7, 9], jnp.int32)
+
+    def wave(spec):
+        return jax.make_jaxpr(
+            lambda c, t, s, p: tf.decode_wave(
+                params, cfg, c, t, s, p, kv_len=16, attn_spec=spec)
+        )(caches, tok, slots, pos)
+
+    assert _count_pallas_calls(wave(PALLAS)) == 1
+    assert _count_pallas_calls(wave(registry.REF)) == 0
+    assert _count_pallas_calls(wave(None)) == 0
+
+
+# ---------------------------------------------------------------------------
+# pool seq-axis alignment + observability
+# ---------------------------------------------------------------------------
+
+def test_pool_seq_block_alignment():
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    pool = KVCachePool(cfg, capacity=2, max_seq=20, seq_block=16)
+    assert pool.max_seq == 32                       # aligned up
+    cls = cfg.layer_pattern[0]
+    assert pool.caches["classes"][cls]["k"].shape[2] == 32
+    pool.grow_seq(33)
+    assert pool.max_seq == 48                       # growth stays aligned
+    # attn_len: block-aligned valid prefix, clamped to the pool
+    assert pool.attn_len(3, bucket=2) == 16
+    assert pool.attn_len(16, bucket=2) == 32
+    assert pool.attn_len(200, bucket=2) == 48
+    st = pool.stats
+    assert st.blocks_total == 9 and st.blocks_skipped == (2 + 1 + 0)
+    # graph keys carry the pool shape too: growth retraces every bucket
+    assert st.compiled == {(2, 16, 2, 48), (2, 32, 2, 48), (2, 48, 2, 48)}
+    assert st.decode_compiles == 3
+    pool.grow_seq(64)
+    assert pool.attn_len(3, bucket=2) == 16
+    assert st.decode_compiles == 4          # same bucket/kv_len, new shape
+
+
+@pytest.fixture(scope="module")
+def tiny_ralm():
+    """Same serving fixture family as tests/test_kvpool.py."""
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, 64, size=(64,))
+    corpus = [start]
+    for _ in range(31):
+        corpus.append((3 * corpus[-1] + 1) % 64)
+    corpus = np.stack(corpus, axis=1).astype(np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8,
+                          list_cap=512).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+    rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999,
+                    temperature=1.0)
+    return cfg, params, corpus, ds, ccfg, rag
+
+
+def _serve_tokens(tiny, attn_backend, **kw):
+    cfg, params, corpus, ds, ccfg, rag = tiny
+    eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg),
+                                attn_backend=attn_backend, **kw)
+    specs = [(corpus[:2, :5], 6), (corpus[2:4, :8], 6), (corpus[4:5, :11], 4)]
+    rids = [eng.submit(RalmRequest(prompt=jnp.asarray(p), steps=s))
+            for p, s in specs]
+    by_id = {r.request_id: r.tokens for r in eng.run()}
+    return [by_id[rid] for rid in rids], eng
+
+
+def test_serve_parity_kernel_on_vs_off(tiny_ralm):
+    """Greedy serve outputs are token-identical with the decode-attn
+    kernel on (pallas) vs off (legacy einsum) vs the grouped ref
+    default, ragged prompts included — and match the per-sequence
+    oracle loop."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    want, _ = _serve_tokens(tiny_ralm, "einsum")
+    for backend in (None, "ref", "pallas"):
+        got, _ = _serve_tokens(tiny_ralm, backend, max_seq=64)
+        for a, b in zip(got, want):
+            assert (a == b).all(), backend
+    oracle = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg),
+                                   wave=False)
+    for tokens, (p, s) in zip(want, [(corpus[:2, :5], 6),
+                                     (corpus[2:4, :8], 6),
+                                     (corpus[4:5, :11], 4)]):
+        assert (tokens == np.asarray(
+            oracle.generate(jnp.asarray(p), steps=s))).all()
+
+
+def test_serve_blocks_skipped_and_compile_churn(tiny_ralm):
+    """Ragged-wave savings and jit churn are observable: short waves in
+    an over-provisioned pool skip most seq blocks, and the decode-graph
+    count stays at O(buckets x lengths), not O(waves)."""
+    _, eng = _serve_tokens(tiny_ralm, None, max_seq=64)
+    ps = eng.pool.stats
+    assert eng.pool.max_seq == 64 and eng.pool.seq_block == 16
+    # positions never exceed 14 -> every wave crops to 16 of 64 slots
+    assert ps.blocks_total == 4 * ps.waves
+    assert ps.blocks_skipped == 3 * ps.waves
+    assert ps.skip_fraction() == pytest.approx(0.75)
+    # one (bucket, kv_len, pool shape) graph per wave bucket: far fewer
+    # than waves
+    assert ps.decode_compiles < ps.waves
+    assert all(key[1] == 16 for key in ps.compiled)
