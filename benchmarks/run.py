@@ -20,6 +20,12 @@ shards) and writes ``BENCH_kernels.json`` with the per-stage breakdown
 against the legacy full-seq einsum over (batch, pool seq, window, GQA
 ratio) and writes ``BENCH_decode_attn.json`` (see
 benchmarks/decode_attn_bench.py).
+
+``--mode traffic`` drives the HTTP serving gateway with a closed-loop
+capacity calibration plus an open-loop Poisson sweep (heavy-tailed
+lengths, multi-tenant, up to 2x overload) and merges a ``traffic``
+section — p50/p99 TTFT/TPOT, shed + degrade counts, greedy-parity
+replay — into ``BENCH_serve.json`` (see benchmarks/loadgen.py).
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["figures", "retrieval", "serve", "kernels",
-                             "decode-attn"],
+                             "decode-attn", "traffic"],
                     default="figures")
     ap.add_argument("--out", default=None,
                     help="output path for the sweep modes")
@@ -57,6 +63,11 @@ def main() -> None:
     if args.mode == "serve":
         from benchmarks import serve_bench
         serve_bench.main(args.out or "BENCH_serve.json")
+        return
+
+    if args.mode == "traffic":
+        from benchmarks import loadgen
+        loadgen.main(args.out or "BENCH_serve.json")
         return
 
     from benchmarks import paper_figures as pf

@@ -9,6 +9,17 @@ monolithic (one mesh) or disaggregated (LM pool + retrieval pool) —
 identical tokens either way.
 
     PYTHONPATH=src python examples/serve_ralm.py [--disaggregate]
+
+``--gateway`` instead serves the same engine over HTTP (OpenAI-style
+``/v1/completions`` with SSE streaming; see docs/serving.md):
+
+    PYTHONPATH=src python examples/serve_ralm.py --gateway --port 8000
+    curl -N localhost:8000/v1/completions -H 'Content-Type: application/json' \
+      -d '{"prompt": [17, 52, 31, 30, 27, 18, 55, 38],
+           "max_tokens": 8, "stream": true}'
+    # data: {"id": "cmpl-0", ..., "choices": [{"text": " 5", ...}]}
+    # ...
+    # data: [DONE]
 """
 import argparse
 import dataclasses
@@ -35,6 +46,12 @@ ap.add_argument("--per-sequence", action="store_true",
 ap.add_argument("--kv-slots", type=int, default=None,
                 help="fix the KV pool capacity in prompt rows (admission "
                      "defers when full); default grows on demand")
+ap.add_argument("--gateway", action="store_true",
+                help="serve the engine over HTTP instead of running the "
+                     "batch demo: OpenAI-style /v1/completions with SSE "
+                     "streaming, per-tenant admission, load shedding")
+ap.add_argument("--port", type=int, default=8000,
+                help="gateway listen port (with --gateway)")
 args = ap.parse_args()
 wave = not args.per_sequence
 
@@ -90,6 +107,14 @@ else:
     engine = RalmEngine.monolithic(params, cfg, rag,
                                    retriever=ds.retriever(ccfg),
                                    wave=wave, kv_slots=args.kv_slots)
+
+if args.gateway:
+    # same engine, served over HTTP: streaming SSE completions, tenant
+    # quotas + queue-depth backpressure, retrieval-quality degradation
+    # under load (docs/serving.md, "The front door")
+    from repro.serve import Gateway, GatewayConfig
+    Gateway(engine, GatewayConfig(port=args.port)).serve_forever()
+    sys.exit(0)
 
 # two request batches in flight at once: the scheduler pipelines them
 outs = engine.generate_batches([jnp.asarray(corpus[:4, :8]),

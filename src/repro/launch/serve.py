@@ -80,6 +80,15 @@ def main() -> None:
                     help="KV-pool seq-axis alignment quantum: per-wave "
                          "attention reads crop to this multiple of the "
                          "valid prefix instead of the padded max_seq")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve over HTTP instead of running the demo "
+                         "batches: OpenAI-style /v1/completions with SSE "
+                         "streaming, per-tenant admission + backpressure, "
+                         "load-shedding degradation (docs/serving.md)")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="gateway listen port (with --gateway)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="gateway bind address (with --gateway)")
     args = ap.parse_args()
 
     from repro.models import transformer as tf
@@ -112,6 +121,12 @@ def main() -> None:
                                            else None),
                            attn_seq_block=args.attn_seq_block)
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
+
+    if args.gateway:
+        from repro.serve import Gateway, GatewayConfig
+        Gateway(engine, GatewayConfig(host=args.host,
+                                      port=args.port)).serve_forever()
+        return
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
                                         size=(args.batch, 8), dtype=np.int32))

@@ -22,14 +22,19 @@ from repro.serve.api import (AsyncRetriever, DistributedRetriever,
 from repro.serve.datastore import Datastore, DatastoreBuilder
 from repro.serve.engine import (DisaggregatedBackend, MonolithicBackend,
                                 PoolTimes, RalmEngine, SequenceState)
+from repro.serve.gateway import (AdmissionController, DegradeConfig,
+                                 DegradePolicy, Gateway, GatewayConfig,
+                                 TenantQuota)
 from repro.serve.kvpool import KVCachePool, PoolStats
 from repro.serve.scheduler import RalmScheduler
 
 __all__ = [
-    "AsyncRetriever", "Datastore", "DatastoreBuilder",
+    "AdmissionController", "AsyncRetriever", "Datastore",
+    "DatastoreBuilder", "DegradeConfig", "DegradePolicy",
     "DisaggregatedBackend", "DistributedRetriever", "EngineConfig",
-    "KVCachePool", "LocalRetriever", "MonolithicBackend", "PoolStats",
-    "PoolTimes", "RagConfig", "RalmEngine", "RalmRequest", "RalmResponse",
-    "RalmScheduler", "RetrievalService", "Retriever", "SearchHandle",
-    "SequenceState", "ServiceConfig",
+    "Gateway", "GatewayConfig", "KVCachePool", "LocalRetriever",
+    "MonolithicBackend", "PoolStats", "PoolTimes", "RagConfig",
+    "RalmEngine", "RalmRequest", "RalmResponse", "RalmScheduler",
+    "RetrievalService", "Retriever", "SearchHandle", "SequenceState",
+    "ServiceConfig", "TenantQuota",
 ]

@@ -31,7 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Protocol, Tuple, runtime_checkable
+from typing import (Callable, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -53,18 +54,70 @@ from repro.retrieval.service import RetrievalService, SearchHandle
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class RequestTiming:
+    """Wall-clock milestones of one request's serving lifetime, stamped
+    by the scheduler/engine as the request moves through the system
+    (``time.perf_counter()`` seconds — deltas are meaningful, absolutes
+    are not):
+
+      * ``arrival``     — entered the system (``submit()``, or earlier:
+        the HTTP gateway stamps it at request parse, before admission
+        control, so queueing under backpressure is visible);
+      * ``admit``       — claimed KV slots + prefilled (``engine.start``);
+      * ``first_token`` — first generated token materialized on the host
+        (TTFT = first_token - arrival);
+      * ``finish``      — final token emitted (TPOT = (finish -
+        first_token) / (steps - 1) for steps > 1).
+    """
+    arrival: Optional[float] = None
+    admit: Optional[float] = None
+    first_token: Optional[float] = None
+    finish: Optional[float] = None
+
+    def ttft_s(self) -> Optional[float]:
+        if self.arrival is None or self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    def tpot_s(self, steps: int) -> Optional[float]:
+        if self.first_token is None or self.finish is None or steps < 2:
+            return None
+        return (self.finish - self.first_token) / (steps - 1)
+
+
+@dataclasses.dataclass
 class RalmRequest:
     """One serving request: a prompt batch decoded in lockstep.
 
     ``trace``: optional list collecting per-step dicts (retrieved ids
     etc.) for benchmarks and tests, same contract as the old
-    ``generate(..., trace=)``."""
+    ``generate(..., trace=)``.
+
+    ``tenant`` names the submitting client class for per-tenant
+    admission accounting (quotas, fair dequeue, queue-depth stats) —
+    purely an accounting label, it never changes the math.
+
+    ``on_token`` is the streaming hook: called as ``on_token(step,
+    tokens)`` with the host-materialized ``[B]`` int array of the
+    step's sampled tokens, from the thread running the scheduler, the
+    moment the step's wave completes. Setting it costs one host sync
+    per wave (the tokens must leave the device), so leave it ``None``
+    for throughput-only workloads.
+
+    ``cancelled`` aborts the request at the next scheduler step (slots
+    are released, the response is flagged); flip it via
+    ``RalmScheduler.cancel`` — e.g. the gateway on a mid-stream client
+    disconnect."""
     prompt: jnp.ndarray                  # [B, T0] int32
     steps: int
     greedy: bool = True
     rng: Optional[jax.Array] = None
     trace: Optional[list] = None
     request_id: Optional[int] = None     # assigned at submit()
+    tenant: str = "default"
+    on_token: Optional[Callable[[int, np.ndarray], None]] = None
+    cancelled: bool = False
+    times: RequestTiming = dataclasses.field(default_factory=RequestTiming)
 
 
 @dataclasses.dataclass
@@ -73,6 +126,9 @@ class RalmResponse:
     tokens: np.ndarray                   # [B, T0 + steps]
     steps: int
     trace: Optional[list] = None
+    tenant: str = "default"
+    cancelled: bool = False
+    times: Optional[RequestTiming] = None
 
 
 @dataclasses.dataclass(frozen=True)

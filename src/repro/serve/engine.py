@@ -258,7 +258,7 @@ class SequenceState:
 
     @property
     def done(self) -> bool:
-        return self.step >= self.request.steps
+        return self.request.cancelled or self.step >= self.request.steps
 
     def tokens(self) -> jnp.ndarray:
         return jnp.concatenate(self.out, axis=1)
@@ -495,6 +495,7 @@ class RalmEngine:
         (so cache leaves line up slot-for-slot) and scatter the rows in;
         the request itself holds no cache."""
         B, T0 = request.prompt.shape
+        request.times.admit = time.perf_counter()
         if self.wave:
             pool = self._ensure_pool(B, T0 + request.steps)
             slots = pool.alloc(B)
@@ -745,6 +746,21 @@ class RalmEngine:
     def _emit(seq: SequenceState, nxt: jnp.ndarray) -> None:
         seq.cur = nxt[:, None]
         seq.out.append(seq.cur)
+        req = seq.request
+        if req.on_token is not None:
+            # the streaming hook needs host tokens, which forces the
+            # wave's device work to complete here — one sync per wave
+            # (the first row's asarray blocks; the rest are free). The
+            # first-token timestamp is taken AFTER the sync so TTFT
+            # measures token availability, not dispatch.
+            host = np.asarray(nxt)
+            if req.times.first_token is None:
+                req.times.first_token = time.perf_counter()
+            req.on_token(seq.step, host)
+        elif req.times.first_token is None:
+            # no streaming consumer: stamp dispatch time (approximate —
+            # jax async dispatch means the value may still be in flight)
+            req.times.first_token = time.perf_counter()
         seq.step += 1
 
     # -- serving API --------------------------------------------------------

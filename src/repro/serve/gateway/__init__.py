@@ -1,0 +1,23 @@
+"""``repro.serve.gateway`` — the streaming HTTP front door.
+
+Stdlib-only serving layer over ``RalmEngine``: OpenAI-compatible
+``/v1/completions`` with SSE streaming, per-tenant admission control
+(429/503 backpressure), and graceful retrieval-quality degradation
+under load. See ``docs/serving.md`` ("The front door") for the tour::
+
+    from repro.serve.gateway import Gateway, GatewayConfig
+
+    gw = Gateway(engine, GatewayConfig(port=8000))
+    gw.serve_forever()        # or gw.start_background() from tests
+"""
+from repro.serve.gateway.admission import (AdmissionController, TenantQuota,
+                                           TokenBucket, Verdict)
+from repro.serve.gateway.degrade import (DegradeConfig, DegradeLevel,
+                                         DegradePolicy)
+from repro.serve.gateway.server import Gateway, GatewayConfig
+
+__all__ = [
+    "AdmissionController", "DegradeConfig", "DegradeLevel",
+    "DegradePolicy", "Gateway", "GatewayConfig", "TenantQuota",
+    "TokenBucket", "Verdict",
+]

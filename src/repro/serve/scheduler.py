@@ -37,8 +37,9 @@ pools defer requests until slots free up) in strict FIFO order.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import TYPE_CHECKING, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
 
@@ -76,8 +77,27 @@ class RalmScheduler:
                 f"request_id {request.request_id} already issued")
         self._issued.add(request.request_id)
         self._next_id = max(self._next_id, request.request_id) + 1
+        if request.times.arrival is None:
+            request.times.arrival = time.perf_counter()
         self.queue.append(request)
         return request.request_id
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a request: a queued one is dropped immediately (no
+        response will be produced for it); an active one is flagged and
+        cleaned up — slots released, response emitted with
+        ``cancelled=True`` — at the next ``step()``. Returns whether the
+        id named a live request. Call from the thread that runs
+        ``step()`` (the scheduler is not locked)."""
+        for req in self.queue:
+            if req.request_id == request_id:
+                self.queue.remove(req)
+                return True
+        for seq in self.active:
+            if seq.request.request_id == request_id:
+                seq.request.cancelled = True
+                return True
+        return False
 
     def _admit(self) -> None:
         while self.queue and (self.max_active is None or
@@ -93,6 +113,43 @@ class RalmScheduler:
     @property
     def num_active(self) -> int:
         return len(self.active)
+
+    # -- queue observability (the gateway's backpressure signal) -------------
+
+    @property
+    def queued_requests(self) -> int:
+        """Requests admitted into the FIFO but not yet started. The old
+        surface only ever exposed ``queue[0]`` implicitly through
+        ``step()``; backpressure thresholds need the depth itself."""
+        return len(self.queue)
+
+    def queue_age_max_s(self, now: Optional[float] = None) -> float:
+        """Age of the oldest queued request (0.0 when empty) — the
+        head-of-line wait a newly arriving request is signing up behind."""
+        if not self.queue:
+            return 0.0
+        now = time.perf_counter() if now is None else now
+        oldest = min((r.times.arrival for r in self.queue
+                      if r.times.arrival is not None), default=now)
+        return max(0.0, now - oldest)
+
+    def tenant_depths(self) -> Dict[str, int]:
+        """Queued-request count per tenant (active sequences excluded:
+        they already hold slots)."""
+        depths: Dict[str, int] = {}
+        for req in self.queue:
+            depths[req.tenant] = depths.get(req.tenant, 0) + 1
+        return depths
+
+    def queue_stats(self, now: Optional[float] = None) -> Dict[str, object]:
+        """One observable snapshot for /statsz and the degrade policy."""
+        return dict(
+            queued_requests=self.queued_requests,
+            active_requests=self.num_active,
+            active_rows=sum(seq.cur.shape[0] for seq in self.active),
+            queue_age_max_s=self.queue_age_max_s(now),
+            tenant_depth=self.tenant_depths(),
+        )
 
     # ------------------------------------------------------------------
     def step(self) -> List[RalmResponse]:
@@ -149,10 +206,14 @@ class RalmScheduler:
 
     @staticmethod
     def _response(seq) -> RalmResponse:
+        seq.request.times.finish = time.perf_counter()
         return RalmResponse(
             request_id=seq.request.request_id,
             tokens=np.asarray(seq.tokens()),
-            steps=seq.step, trace=seq.request.trace)
+            steps=seq.step, trace=seq.request.trace,
+            tenant=seq.request.tenant,
+            cancelled=seq.request.cancelled,
+            times=seq.request.times)
 
     def run(self) -> List[RalmResponse]:
         """Drain the queue: step until nothing is queued or active."""

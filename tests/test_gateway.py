@@ -1,0 +1,500 @@
+"""The serving front door: HTTP gateway, admission control, degradation.
+
+The load-bearing claims, in test order:
+
+  * admission is correct bookkeeping (token-bucket math, round-robin
+    fairness) — pure unit tests on an injected clock, no jax;
+  * the degradation ladder steps down under sustained pressure and
+    back up on recovery, actually mutating the live engine (interval,
+    mode, nprobe), with hysteresis — unit tests on a stub engine;
+  * tokens streamed over real HTTP/SSE are byte-identical to the
+    in-process greedy engine (serving is a transport, not a model
+    change — the same parity discipline as tests/test_serve.py);
+  * two tenants' streams interleave (continuous batching is visible
+    through the network layer, not just in-process);
+  * a mid-stream disconnect releases the client's KV slots: with a
+    1-slot pool, a second request completes only if the first's
+    abandoned slot was reclaimed;
+  * over-quota is a 429 and a full pipeline is a 503, both with
+    Retry-After — bounded responses, not unbounded queueing.
+
+HTTP tests share one module-scoped gateway (jit caches are global, so
+the extra engines for the disconnect/backpressure tests are cheap).
+"""
+import dataclasses
+import json
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.chamvs import ChamVSConfig, IVFPQConfig
+from repro.models import transformer as tf
+from repro.serve import (DatastoreBuilder, RagConfig, RalmEngine,
+                         RalmRequest)
+from repro.serve.gateway import (AdmissionController, DegradeConfig,
+                                 DegradePolicy, Gateway, GatewayConfig,
+                                 TenantQuota, TokenBucket)
+
+# ---------------------------------------------------------------------------
+# admission control (pure host-side units)
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(tenant="default", rows=1, rid=None):
+    return RalmRequest(prompt=jnp.zeros((rows, 4), jnp.int32), steps=1,
+                       tenant=tenant, request_id=rid)
+
+
+def test_token_bucket_rate_and_burst():
+    clock = FakeClock()
+    b = TokenBucket(TenantQuota(rate=2.0, burst=2.0), clock=clock)
+    assert b.try_take() is None and b.try_take() is None  # burst of 2
+    wait = b.try_take()                                   # bucket empty
+    assert wait == pytest.approx(0.5)                     # 1 token / 2 rps
+    clock.t += 0.5
+    assert b.try_take() is None                           # refilled
+    # unmetered tenants never wait
+    free = TokenBucket(TenantQuota(), clock=clock)
+    assert all(free.try_take() is None for _ in range(100))
+
+
+def test_admission_quota_429_and_depth_503():
+    clock = FakeClock()
+    ctl = AdmissionController(
+        max_queue_depth=2,
+        quotas={"metered": TenantQuota(rate=1.0, burst=1.0)}, clock=clock)
+    ok = ctl.offer(_req("metered"))
+    assert ok.admitted
+    over = ctl.offer(_req("metered"))              # burst spent
+    assert (not over.admitted and over.status == 429
+            and over.retry_after_s > 0)
+    assert ctl.offer(_req("other")).admitted       # other tenant unaffected
+    full = ctl.offer(_req("other"))                # pending == depth bound
+    assert not full.admitted and full.status == 503
+    # scheduler-side load counts against the same bound
+    ctl2 = AdmissionController(max_queue_depth=2, clock=clock)
+    deep = ctl2.offer(_req(), in_system=2)
+    assert not deep.admitted and deep.status == 503
+    assert ctl.stats()["rejected_quota"] == 1
+    assert ctl.stats()["rejected_capacity"] == 1
+
+
+def test_admission_round_robin_fairness():
+    """A burst from one tenant cannot monopolize release order."""
+    ctl = AdmissionController(max_queue_depth=100)
+    for i in range(4):
+        ctl.offer(_req("hog", rid=i))
+    ctl.offer(_req("mouse", rid=100))
+    order = [ctl.take(lambda r: True).tenant for _ in range(5)]
+    assert order.index("mouse") <= 1               # released 1st or 2nd
+    assert ctl.take(lambda r: True) is None
+
+
+def test_admission_take_respects_fits_and_cancel():
+    ctl = AdmissionController(max_queue_depth=10)
+    ctl.offer(_req("a", rows=4, rid=1))
+    ctl.offer(_req("b", rows=1, rid=2))
+    # only 2 rows free: tenant a's head doesn't fit, b's does — a is
+    # skipped this round instead of head-of-line blocking everyone
+    got = ctl.take(lambda r: r.prompt.shape[0] <= 2)
+    assert got is not None and got.tenant == "b"
+    assert ctl.take(lambda r: r.prompt.shape[0] <= 2) is None
+    assert ctl.cancel(1) and not ctl.cancel(1)     # drop a's queued head
+    assert ctl.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation policy (stub engine: no jax work, real config mutation)
+# ---------------------------------------------------------------------------
+
+
+class _StubRetriever:
+    def __init__(self, nprobe):
+        self.cfg = ChamVSConfig(IVFPQConfig(dim=32, nlist=8, m=8),
+                                nprobe=nprobe, k=8)
+
+
+class _StubEngine:
+    def __init__(self, nprobe=4, interval=1):
+        self.rag = RagConfig(mode="knnlm", interval=interval, k=8)
+        self.retriever = _StubRetriever(nprobe)
+
+
+def test_degrade_ladder_shape():
+    pol = DegradePolicy(_StubEngine(nprobe=8))
+    names = [lv.name for lv in pol.ladder]
+    assert names[0] == "baseline" and names[-1] == "knn-off"
+    nprobes = [lv.nprobe for lv in pol.ladder]
+    assert nprobes[:4] == [8, 4, 2, 1]             # halving rungs
+    assert pol.ladder[-2].interval > pol.ladder[0].interval
+    # an engine already running retrieval-free has nothing to shed
+    bare = _StubEngine()
+    bare.rag = RagConfig(mode="none")
+    assert len(DegradePolicy(bare).ladder) == 1
+
+
+def test_degrade_steps_down_and_recovers_with_hysteresis():
+    eng = _StubEngine(nprobe=4, interval=1)
+    pol = DegradePolicy(eng, DegradeConfig(high_watermark=4,
+                                           low_watermark=1, patience=3,
+                                           recovery=5))
+    # two pressured ticks then calm: patience not met, no transition
+    assert not pol.observe(10) and not pol.observe(10)
+    assert not pol.observe(0) and pol.level == 0
+    # sustained pressure: step down once per `patience` ticks
+    for _ in range(2):
+        pol.observe(10)
+    assert pol.observe(10) and pol.level == 1
+    assert eng.retriever.cfg.nprobe == 2           # applied to the engine
+    # keep pressing all the way to the knn-off rung — and no further
+    for _ in range(3 * len(pol.ladder)):
+        pol.observe(10)
+    assert pol.level == len(pol.ladder) - 1
+    assert eng.rag.mode == "none"
+    # mid-band depth (between watermarks) resets both counters
+    pol.observe(3)
+    # sustained calm: climb back one rung per `recovery` ticks
+    for _ in range(5 * len(pol.ladder)):
+        pol.observe(0)
+    assert pol.level == 0
+    assert eng.rag.mode == "knnlm" and eng.rag.interval == 1
+    assert eng.retriever.cfg.nprobe == 4           # baseline restored
+    st = pol.stats()
+    assert st["transitions_down"] == len(pol.ladder) - 1
+    assert st["transitions_up"] == len(pol.ladder) - 1
+    assert len(pol.history) == st["transitions_down"] + st["transitions_up"]
+
+
+# ---------------------------------------------------------------------------
+# the HTTP gateway itself
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_ralm():
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, 64, size=(64,))
+    corpus = [start]
+    for _ in range(31):
+        corpus.append((3 * corpus[-1] + 1) % 64)
+    corpus = np.stack(corpus, axis=1).astype(np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8,
+                          list_cap=512).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+    rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999,
+                    temperature=1.0)
+    return cfg, params, corpus, ds, ccfg, rag
+
+
+def _engine(tiny_ralm, **kw):
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("kv_slots", 8)
+    kw.setdefault("attn_seq_block", 64)
+    return RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg), **kw)
+
+
+@pytest.fixture(scope="module")
+def gw(tiny_ralm):
+    gateway = Gateway(_engine(tiny_ralm), GatewayConfig(
+        quotas=(("metered", TenantQuota(rate=0.001, burst=1.0)),)))
+    gateway.start_background()
+    yield gateway
+    gateway.shutdown()
+
+
+def _post(port, payload, tenant=None, timeout=300.0):
+    """One POST /v1/completions over a raw socket; returns (status,
+    header dict, body bytes). Raw sockets (not http.client) so the SSE
+    read loop and the disconnect test control the connection exactly."""
+    body = json.dumps(payload).encode()
+    tenant_h = f"X-Tenant: {tenant}\r\n" if tenant else ""
+    req = (f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n{tenant_h}"
+           f"Content-Length: {len(body)}\r\n\r\n").encode() + body
+    s = socket.create_connection(("127.0.0.1", port), timeout=timeout)
+    s.sendall(req)
+    raw = b""
+    while b"\r\n\r\n" not in raw:
+        raw += s.recv(4096)
+    head, rest = raw.split(b"\r\n\r\n", 1)
+    lines = head.decode().split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {}
+    for ln in lines[1:]:
+        k, v = ln.split(":", 1)
+        headers[k.strip().lower()] = v.strip()
+    return s, status, headers, rest
+
+
+def _drain_sse(s, rest=b""):
+    """Read SSE events until [DONE]; returns (token list, final chunk,
+    per-token wall-clock arrival times)."""
+    buf, toks, stamps, final = rest, [], [], None
+    while b"data: [DONE]\n\n" not in buf:
+        data = s.recv(4096)
+        assert data, "connection closed before [DONE]"
+        buf += data
+    s.close()
+    for event in buf.decode().split("\n\n"):
+        if not event.startswith("data: ") or event == "data: [DONE]":
+            continue
+        obj = json.loads(event[6:])
+        choice = obj["choices"][0]
+        if choice["finish_reason"] is None:
+            toks += [int(t) for t in choice["text"].split()]
+            stamps.append(time.perf_counter())
+        else:
+            final = obj
+    return toks, final, stamps
+
+
+def _greedy_ref(tiny_ralm, prompt, steps):
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, rag, ds.retriever(ccfg))
+    out = eng.generate(jnp.asarray([prompt]), steps=steps)
+    return np.asarray(out)[0, len(prompt):].tolist()
+
+
+def test_http_streaming_greedy_parity(gw, tiny_ralm):
+    """Tokens streamed over the wire == the in-process greedy engine."""
+    corpus = tiny_ralm[2]
+    prompt = corpus[0, :8].tolist()
+    s, status, headers, rest = _post(
+        gw.port, {"prompt": prompt, "max_tokens": 6, "stream": True})
+    assert status == 200
+    assert headers["content-type"] == "text/event-stream"
+    toks, final, _ = _drain_sse(s, rest)
+    assert final["choices"][0]["finish_reason"] == "length"
+    assert final["ralm"]["degrade_levels"] == [0]   # unloaded: baseline
+    assert final["ralm"]["ttft_ms"] > 0
+    assert toks == _greedy_ref(tiny_ralm, prompt, 6)
+
+
+def test_http_blocking_completion_and_usage(gw, tiny_ralm):
+    corpus = tiny_ralm[2]
+    prompt = corpus[1, :8].tolist()
+    s, status, _, rest = _post(gw.port,
+                               {"prompt": prompt, "max_tokens": 4})
+    while True:
+        data = s.recv(4096)
+        if not data:
+            break
+        rest += data
+    s.close()
+    assert status == 200
+    obj = json.loads(rest)
+    assert obj["usage"] == {"prompt_tokens": 8, "completion_tokens": 4,
+                            "total_tokens": 12}
+    toks = [int(t) for t in obj["choices"][0]["text"].split()]
+    assert toks == _greedy_ref(tiny_ralm, prompt, 4)
+
+
+def test_http_multi_tenant_streams_interleave(gw, tiny_ralm):
+    """Two tenants streaming concurrently: both greedy-correct, and
+    both *observed active at once* on the engine — continuous batching
+    visible through the network layer. The second client launches only
+    after the first is live (pure wall-clock racing is flaky: a tiny
+    model drains 10 steps faster than a socket handshake)."""
+    corpus = tiny_ralm[2]
+    pa, pb = corpus[2, :8].tolist(), corpus[3, :8].tolist()
+    out = {}
+
+    def client(name, prompt):
+        s, status, _, rest = _post(
+            gw.port, {"prompt": prompt, "max_tokens": 32, "stream": True},
+            tenant=name)
+        assert status == 200
+        out[name] = _drain_sse(s, rest)
+
+    ta = threading.Thread(target=client, args=("alice", pa))
+    ta.start()
+    deadline = time.time() + 120
+    while gw.scheduler.num_active < 1 and time.time() < deadline:
+        time.sleep(0.002)
+    assert gw.scheduler.num_active >= 1, "first stream never started"
+    tb = threading.Thread(target=client, args=("bob", pb))
+    tb.start()
+    saw_both = False
+    while ta.is_alive() and time.time() < deadline:
+        if gw.scheduler.num_active >= 2:
+            saw_both = True
+            break
+        time.sleep(0.002)
+    ta.join()
+    tb.join()
+    assert saw_both, "streams were never active concurrently"
+    assert out["alice"][0] == _greedy_ref(tiny_ralm, pa, 32)
+    assert out["bob"][0] == _greedy_ref(tiny_ralm, pb, 32)
+    assert out["alice"][1]["ralm"]["tenant"] == "alice"
+    assert out["bob"][1]["ralm"]["tenant"] == "bob"
+
+
+def test_http_429_over_quota(gw, tiny_ralm):
+    corpus = tiny_ralm[2]
+    prompt = corpus[4, :8].tolist()
+    s, status, _, rest = _post(gw.port,
+                               {"prompt": prompt, "max_tokens": 1},
+                               tenant="metered")
+    while s.recv(4096):
+        pass
+    s.close()
+    assert status == 200                      # burst of 1 admits the first
+    s, status, headers, _ = _post(gw.port,
+                                  {"prompt": prompt, "max_tokens": 1},
+                                  tenant="metered")
+    s.close()
+    assert status == 429
+    assert int(headers["retry-after"]) >= 1
+    assert gw.admission.rejected_quota >= 1
+
+
+def test_http_400_bad_requests(gw):
+    for payload in ({"prompt": [999], "max_tokens": 1},     # out of vocab
+                    {"prompt": [], "max_tokens": 1},        # empty
+                    {"prompt": [1, 2], "max_tokens": 0},    # no tokens
+                    {"prompt": [1, 2], "max_tokens": 10_000},
+                    {"prompt": [1] * 60, "max_tokens": 60}):  # > max_seq
+        s, status, _, _ = _post(gw.port, payload)
+        s.close()
+        assert status == 400, payload
+
+
+def test_http_statsz_surfaces_queue_observability(gw):
+    s = socket.create_connection(("127.0.0.1", gw.port), timeout=30)
+    s.sendall(b"GET /statsz HTTP/1.1\r\nHost: t\r\n\r\n")
+    raw = b""
+    while True:
+        data = s.recv(4096)
+        if not data:
+            break
+        raw += data
+    s.close()
+    stats = json.loads(raw.split(b"\r\n\r\n", 1)[1])
+    sched = stats["scheduler"]
+    for key in ("queued_requests", "active_requests", "active_rows",
+                "queue_age_max_s", "tenant_depth"):
+        assert key in sched
+    assert stats["admission"]["admitted"] >= 1
+    assert stats["degrade"]["level_name"] == "baseline"
+    assert stats["kv_pool"]["capacity"] == 8
+    assert stats["completions"] >= 1 and stats["tokens_out"] >= 1
+
+
+def test_disconnect_releases_kv_slot(tiny_ralm):
+    """kv_slots=1: a second request can only complete if the first
+    client's mid-stream disconnect released its slot."""
+    gateway = Gateway(_engine(tiny_ralm, kv_slots=1), GatewayConfig())
+    gateway.start_background()
+    try:
+        corpus = tiny_ralm[2]
+        prompt = corpus[5, :8].tolist()
+        s, status, _, rest = _post(
+            gateway.port,
+            {"prompt": prompt, "max_tokens": 40, "stream": True})
+        assert status == 200
+        buf = rest
+        while buf.count(b"\n\n") < 2:          # a couple of live tokens
+            buf += s.recv(4096)
+        s.close()                              # walk away mid-stream
+        # the slot must come back: this request needs the whole pool
+        s2, status2, _, rest2 = _post(
+            gateway.port,
+            {"prompt": prompt, "max_tokens": 4, "stream": True},
+            timeout=300.0)
+        assert status2 == 200
+        toks, final, _ = _drain_sse(s2, rest2)
+        assert toks == _greedy_ref(tiny_ralm, prompt, 4)
+        deadline = time.time() + 30
+        while gateway.disconnects < 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert gateway.disconnects == 1
+        assert gateway.engine.pool.num_used == 0
+        assert gateway.scheduler.num_active == 0
+    finally:
+        gateway.shutdown()
+
+
+def test_backpressure_503_when_pipeline_full(tiny_ralm):
+    """max_queue_depth=1: with one request in flight, the next offer is
+    a bounded 503 + Retry-After instead of unbounded queueing."""
+    gateway = Gateway(_engine(tiny_ralm),
+                      GatewayConfig(max_queue_depth=1))
+    gateway.start_background()
+    try:
+        corpus = tiny_ralm[2]
+        prompt = corpus[6, :8].tolist()
+        s1, status1, _, rest1 = _post(
+            gateway.port,
+            {"prompt": prompt, "max_tokens": 40, "stream": True})
+        assert status1 == 200
+        buf = rest1
+        while b"\n\n" not in buf:              # request 1 is live
+            buf += s1.recv(4096)
+        s2, status2, headers2, _ = _post(
+            gateway.port, {"prompt": prompt, "max_tokens": 1})
+        s2.close()
+        assert status2 == 503
+        assert int(headers2["retry-after"]) >= 1
+        assert gateway.admission.rejected_capacity >= 1
+        _drain_sse(s1, buf)                    # let request 1 finish
+    finally:
+        gateway.shutdown()
+
+
+def test_string_prompt_toy_codec(gw, tiny_ralm):
+    """OpenAI-style string prompts ride the documented byte codec."""
+    s, status, _, rest = _post(gw.port,
+                               {"prompt": "hello", "max_tokens": 2})
+    while True:
+        data = s.recv(4096)
+        if not data:
+            break
+        rest += data
+    s.close()
+    assert status == 200
+    obj = json.loads(rest)
+    ref_prompt = [ord(c) % 64 for c in "hello"]
+    toks = [int(t) for t in obj["choices"][0]["text"].split()]
+    assert toks == _greedy_ref(tiny_ralm, ref_prompt, 2)
+
+
+def test_scheduler_cancel_and_queue_stats(tiny_ralm):
+    """Satellite surface: queue depth/age/tenant stats + cancel, driven
+    in-process (no HTTP)."""
+    eng = _engine(tiny_ralm, kv_slots=1)
+    corpus = tiny_ralm[2]
+    r1 = RalmRequest(prompt=jnp.asarray(corpus[:1, :8]), steps=3,
+                     tenant="a")
+    r2 = RalmRequest(prompt=jnp.asarray(corpus[1:2, :8]), steps=3,
+                     tenant="b")
+    eng.submit(r1)
+    eng.submit(r2)
+    st = eng.scheduler.queue_stats()
+    assert st["queued_requests"] == 2 and st["active_requests"] == 0
+    assert st["tenant_depth"] == {"a": 1, "b": 1}
+    assert st["queue_age_max_s"] >= 0.0
+    eng.step()                                  # r1 starts (1 slot)
+    assert eng.scheduler.queued_requests == 1
+    assert eng.scheduler.cancel(r2.request_id)  # queued: dropped now
+    assert eng.scheduler.queued_requests == 0
+    assert eng.scheduler.cancel(r1.request_id)  # active: flagged
+    (resp,) = eng.step()                        # cleaned up next step
+    assert resp.cancelled and resp.request_id == r1.request_id
+    assert eng.pool.num_used == 0
+    assert not eng.scheduler.cancel(999)        # unknown id
