@@ -144,9 +144,9 @@ def complete_streaming(host: str, port: int, prompt: List[int],
         s.close()
 
 
-def get_statsz(host: str, port: int, timeout: float = 30.0) -> dict:
+def _get(host: str, port: int, path: str, timeout: float = 30.0) -> bytes:
     s = socket.create_connection((host, port), timeout=timeout)
-    s.sendall(b"GET /statsz HTTP/1.1\r\nHost: lg\r\n\r\n")
+    s.sendall(f"GET {path} HTTP/1.1\r\nHost: lg\r\n\r\n".encode())
     buf = b""
     while True:
         data = s.recv(65536)
@@ -154,7 +154,39 @@ def get_statsz(host: str, port: int, timeout: float = 30.0) -> dict:
             break
         buf += data
     s.close()
-    return json.loads(buf.split(b"\r\n\r\n", 1)[1])
+    return buf.split(b"\r\n\r\n", 1)[1]
+
+
+def get_statsz(host: str, port: int, timeout: float = 30.0) -> dict:
+    return json.loads(_get(host, port, "/statsz", timeout))
+
+
+def get_metricsz(host: str, port: int, timeout: float = 30.0) -> str:
+    """Prometheus text exposition from the gateway's /metricsz."""
+    return _get(host, port, "/metricsz", timeout).decode()
+
+
+def get_tracez(host: str, port: int, clear: bool = False,
+               timeout: float = 30.0) -> dict:
+    """Chrome trace-event JSON from /tracez (clear=True drains the
+    buffer — the per-load-level capture boundary)."""
+    path = "/tracez?clear=1" if clear else "/tracez"
+    return json.loads(_get(host, port, path, timeout))
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Sample name (incl. label string) -> value, comments skipped."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        try:
+            out[name] = float(value)
+        except ValueError:
+            continue
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -372,7 +404,12 @@ def _build_gateway():
                                      max_seq=MAX_SEQ, kv_slots=KV_SLOTS,
                                      attn_seq_block=MAX_SEQ)
 
-    gw = Gateway(make_engine(), GatewayConfig(
+    # the Gateway snapshots engine.tracer at construction, so install
+    # the live tracer on the serving engine BEFORE building it
+    from repro.obs import Tracer
+    eng = make_engine()
+    eng.set_tracer(Tracer(enabled=True, capacity=1 << 17))
+    gw = Gateway(eng, GatewayConfig(
         max_queue_depth=12,
         degrade=DegradeConfig(high_watermark=4, low_watermark=1,
                               patience=2, recovery=200)))
@@ -418,11 +455,14 @@ def main(out_path: str = "BENCH_serve.json",
     # warm every compile bucket the mix can hit (prompt-length prefills
     # x wave-size decode graphs) so the sweep measures serving, not XLA
     mix = TrafficMix()
+    client_pool: List[RequestRecord] = []   # every request the server saw
     t0 = time.perf_counter()
     for plen in mix.prompt_buckets:
-        complete_streaming(host, port, corpus[0][:plen], 4)
-    run_closed_loop(host, port, corpus, concurrency=KV_SLOTS,
-                    duration_s=2.0)
+        client_pool.append(
+            complete_streaming(host, port, corpus[0][:plen], 4))
+    client_pool.extend(
+        run_closed_loop(host, port, corpus, concurrency=KV_SLOTS,
+                        duration_s=2.0))
     print(f"warmup {time.perf_counter() - t0:.1f}s")
 
     # closed loop: the capacity calibration
@@ -435,10 +475,17 @@ def main(out_path: str = "BENCH_serve.json",
     print(f"closed-loop capacity: {capacity_rps:.2f} rps, "
           f"{closed_sum['tokens_per_s']:.1f} tok/s")
 
+    import os
+
+    from repro.obs import validate_chrome_trace
+    os.makedirs("traces", exist_ok=True)
+
     levels = []
     parity_pool: List[RequestRecord] = []
+    client_pool.extend(closed)
     for frac in load_fractions:
         pre = get_statsz(host, port)
+        get_tracez(host, port, clear=True)   # level capture boundary
         rate = capacity_rps * frac
         t0 = time.perf_counter()
         recs = run_open_loop(host, port, corpus, rate_rps=rate,
@@ -446,6 +493,15 @@ def main(out_path: str = "BENCH_serve.json",
                              mix=mix, seed=int(frac * 1000))
         row = summarize(recs, time.perf_counter() - t0)
         post = get_statsz(host, port)
+        trace_doc = get_tracez(host, port)
+        problems = validate_chrome_trace(trace_doc)
+        trace_path = os.path.join("traces",
+                                  f"loadgen_x{frac}.trace.json")
+        with open(trace_path, "w") as f:
+            json.dump(trace_doc, f)
+        row.update(trace_path=trace_path,
+                   trace_events=len(trace_doc["traceEvents"]),
+                   trace_valid=not problems)
         row.update(
             load_fraction=frac, offered_rps=rate,
             degrade_level_end=post["degrade"]["level"],
@@ -461,18 +517,43 @@ def main(out_path: str = "BENCH_serve.json",
                 - pre["admission"]["rejected_capacity"]))
         levels.append(row)
         parity_pool.extend(recs)
+        client_pool.extend(recs)
         print(f"open loop x{frac}: {row['completed']}/{row['offered']} ok,"
               f" 503={row['rejected_503']},"
               f" ttft p50/p99={row['ttft_ms_p50']:.0f}/"
               f"{row['ttft_ms_p99']:.0f}ms,"
-              f" down={row['degrade_transitions_down']}")
+              f" down={row['degrade_transitions_down']},"
+              f" trace={row['trace_events']}ev"
+              f" valid={row['trace_valid']}")
         # let the backlog drain + ladder recover between levels
         while get_statsz(host, port)["scheduler"]["active_requests"]:
             time.sleep(0.25)
 
     ladder = get_statsz(host, port)["degrade"]["ladder"]
     final_stats = get_statsz(host, port)
+    prom = parse_prometheus(get_metricsz(host, port))
     gw.shutdown()
+
+    # server-vs-client consistency: the gateway's TTFT histogram covers
+    # the WHOLE run (warmup + closed + every open level), so compare its
+    # reservoir percentiles against the pooled client-side distribution
+    client_ttft = sorted(r.ttft_s for r in client_pool
+                         if r.status == 200 and not r.error
+                         and r.ttft_s is not None)
+
+    def _within(client: Optional[float], server: Optional[float],
+                tol: float = 0.10) -> Optional[bool]:
+        if not client or server is None:
+            return None
+        return abs(server - client) <= tol * client
+
+    consistency = {}
+    for q, key in ((0.50, "p50"), (0.99, "p99")):
+        c = _pct(client_ttft, q)
+        srv = prom.get(f"ralm_ttft_seconds_{key}")
+        consistency[key] = dict(
+            client_s=c, server_s=srv, within_10pct=_within(c, srv))
+    print("ttft client-vs-server:", consistency)
 
     parity = _parity_replay(parity_pool, ladder, make_engine)
     print("parity:", parity)
@@ -488,19 +569,32 @@ def main(out_path: str = "BENCH_serve.json",
                  "are CLIENT-side (socket send -> first SSE chunk). "
                  "parity replays single-level requests in-process with "
                  "that degrade level's (nprobe, interval, mode) pinned "
-                 "— streamed bytes must match engine bytes.",
+                 "— streamed bytes must match engine bytes. Each level "
+                 "also captures a Chrome trace via /tracez (written "
+                 "under traces/, open at https://ui.perfetto.dev) and "
+                 "the run ends with a client-vs-/metricsz TTFT "
+                 "consistency check.",
             max_seq=MAX_SEQ, kv_slots=KV_SLOTS,
             max_queue_depth=12, ladder=ladder),
         closed=dict(concurrency=KV_SLOTS, **closed_sum),
         levels=levels,
         parity=parity,
+        metrics_consistency=dict(
+            note="client-side TTFT percentiles over EVERY request the "
+                 "server saw (warmup + closed + all open levels) vs the "
+                 "gateway's /metricsz ralm_ttft_seconds reservoir "
+                 "quantiles; acceptance is within_10pct.",
+            ttft=consistency),
         server=dict(
             completions=final_stats["completions"],
             cancelled=final_stats["cancelled"],
             disconnects=final_stats["disconnects"],
             tokens_out=final_stats["tokens_out"],
             degrade=final_stats["degrade"],
-            admission=final_stats["admission"]),
+            admission=final_stats["admission"],
+            metricsz=dict(sorted(
+                (k, v) for k, v in prom.items()
+                if "_bucket" not in k))),
     )
 
     try:

@@ -154,6 +154,13 @@ def fallback_count(op: Optional[str] = None) -> int:
     return sum(_fallbacks.values())
 
 
+def fallback_counts() -> Dict[str, int]:
+    """Per-op copy of the fallback counters — the gateway's ``/statsz``
+    and the ``/metricsz`` adapter export this so degraded kernel routing
+    is visible in production, not just under pytest."""
+    return dict(_fallbacks)
+
+
 def warn_once(key: Tuple, message: str, category=RuntimeWarning,
               stacklevel: int = 3) -> None:
     """Emit ``message`` once per ``key`` per process (or per

@@ -80,6 +80,15 @@ def main() -> None:
                     help="KV-pool seq-axis alignment quantum: per-wave "
                          "attention reads crop to this multiple of the "
                          "valid prefix instead of the padded max_seq")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the observability tracer and write the "
+                         "Chrome trace-event JSON here on exit (open at "
+                         "https://ui.perfetto.dev; docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus text exposition of the "
+                         "run's metrics registry after the demo batches "
+                         "(with --gateway the same data is live at "
+                         "GET /metricsz)")
     ap.add_argument("--gateway", action="store_true",
                     help="serve over HTTP instead of running the demo "
                          "batches: OpenAI-style /v1/completions with SSE "
@@ -119,13 +128,17 @@ def main() -> None:
                            attn_backend=args.attn_kernel,
                            attn_interpret=(False if args.no_interpret
                                            else None),
-                           attn_seq_block=args.attn_seq_block)
+                           attn_seq_block=args.attn_seq_block,
+                           trace=args.trace is not None,
+                           trace_path=args.trace)
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
 
     if args.gateway:
         from repro.serve import Gateway, GatewayConfig
         Gateway(engine, GatewayConfig(host=args.host,
                                       port=args.port)).serve_forever()
+        if args.trace:
+            print(f"[serve] trace written to {engine.write_trace()}")
         return
 
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -173,6 +186,16 @@ def main() -> None:
                      f"scan {st.scan.mean_s * 1e6:.0f}us "
                      f"merge {st.merge.mean_s * 1e6:.0f}us")
         print(line)
+
+    if args.trace:
+        print(f"[serve] trace written to {engine.write_trace()} "
+              f"({len(engine.tracer.events())} events — open at "
+              "https://ui.perfetto.dev)")
+    if args.metrics:
+        from repro.obs import MetricsRegistry, bind_engine_metrics
+        reg = MetricsRegistry()
+        bind_engine_metrics(reg, engine)
+        print(reg.render(), end="")
 
 
 if __name__ == "__main__":

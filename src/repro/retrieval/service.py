@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import ivfpq
 from repro.core.chamvs import ChamVSConfig, shard_search, stack_shards
+from repro.obs.trace import NULL_TRACER
 from repro.core.ivfpq import IVFPQParams, IVFPQShard
 from repro.kernels.chamvs_scan.ops import fused_shard_scan
 from repro.kernels.ivf_scan.ops import ivf_index_scan
@@ -261,6 +262,7 @@ class RetrievalService:
         self.pipeline = pipeline
         self.config = config or ServiceConfig()
         self.stats = RetrievalStats()
+        self.tracer = NULL_TRACER   # engine.set_tracer swaps a live one in
         self.cache: Optional[QueryCache] = (
             QueryCache(self.config.cache_entries,
                        quant=self.config.cache_quant)
@@ -390,17 +392,32 @@ class RetrievalService:
             batch = jnp.pad(batch, ((0, pad), (0, 0)))
 
         measure = self.config.measure
+        tr = self.tracer
         t0 = time.perf_counter()
         for entry, _ in pending:   # queue wait ends when the batch launches
             self.stats.queue_wait.add(t0 - entry.submit_t)
-        candidates = self.pipeline.scan(batch)
-        if measure:
-            jax.block_until_ready(candidates)
+        if tr.enabled:
+            # retroactive span: the wait started when the OLDEST pending
+            # row was submitted, which predates this call site
+            oldest = pending[0][0].submit_t
+            tr.complete("retrieval.queue_wait", "retrieval", oldest,
+                        t0 - oldest, args={"rows": nrows,
+                                           "entries": len(pending)})
+        # NOTE: with measure=False the scan/merge spans time only the
+        # async dispatch (jax returns before the kernel finishes); with
+        # measure=True the block_until_ready makes them true stage times
+        with tr.span("retrieval.scan", "retrieval",
+                     args={"rows": nrows} if tr.enabled else None):
+            candidates = self.pipeline.scan(batch)
+            if measure:
+                jax.block_until_ready(candidates)
         t1 = time.perf_counter()
-        dists, ids = self.pipeline.merge(candidates,
-                                         self.config.merge_fanout)
+        with tr.span("retrieval.merge", "retrieval"):
+            dists, ids = self.pipeline.merge(candidates,
+                                             self.config.merge_fanout)
+            if measure:
+                jax.block_until_ready((dists, ids))
         if measure:
-            jax.block_until_ready((dists, ids))
             self.stats.scan.add(t1 - t0)
             self.stats.merge.add(time.perf_counter() - t1)
         self.stats.record_batch(

@@ -11,28 +11,46 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
+
+from repro.obs.metrics import Reservoir
 
 
 @dataclasses.dataclass
 class StageStat:
-    """Accumulated wall time for one pipeline stage."""
+    """Accumulated wall time for one pipeline stage.
+
+    Besides mean/max, a bounded reservoir (``repro.obs.metrics.
+    Reservoir``, algorithm R) keeps a uniform sample of the per-event
+    durations so ``summary()`` can report p50/p99 — micro-batching
+    makes the stage distributions bimodal (deadline flushes vs full
+    flushes), and a mean+max pair hides exactly that tail."""
     total_s: float = 0.0
     count: int = 0
     max_s: float = 0.0
+    reservoir: Reservoir = dataclasses.field(
+        default_factory=lambda: Reservoir(cap=1024))
 
     def add(self, dt: float) -> None:
         self.total_s += dt
         self.count += 1
         if dt > self.max_s:
             self.max_s = dt
+        self.reservoir.add(dt)
 
     @property
     def mean_s(self) -> float:
         return self.total_s / self.count if self.count else 0.0
 
+    def p50_s(self) -> float:
+        return self.reservoir.quantile(0.50)
+
+    def p99_s(self) -> float:
+        return self.reservoir.quantile(0.99)
+
     def summary(self) -> Dict[str, float]:
         return dict(mean_us=self.mean_s * 1e6, max_us=self.max_s * 1e6,
+                    p50_us=self.p50_s() * 1e6, p99_us=self.p99_s() * 1e6,
                     total_s=self.total_s, count=self.count)
 
 
@@ -52,7 +70,13 @@ class RetrievalStats:
     (tests/test_chamvs_scan.py::test_fused_graph_contains_single_scan_kernel).
     """
 
-    def __init__(self) -> None:
+    #: gaps between consecutive recorded events larger than this are
+    #: treated as idle time and excluded from the QPS window
+    idle_gap_s: float = 1.0
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter
+                 ) -> None:
+        self._clock = clock
         self.reset()
 
     def reset(self) -> None:
@@ -72,20 +96,30 @@ class RetrievalStats:
         self.gather = StageStat()
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        self._active_s = 0.0          # accumulated busy window (gaps
+        #                               clipped to idle_gap_s)
 
     # ------------------------------------------------------------------
-    def record_submit(self, nrows: int) -> None:
-        now = time.perf_counter()
+    def _touch(self, now: float) -> None:
+        """Advance the active-time window: accumulate the gap since the
+        previous event, clipped to ``idle_gap_s`` so a long idle pause
+        between bursts doesn't deflate the rate."""
         if self._t_first is None:
             self._t_first = now
+        else:
+            self._active_s += min(max(0.0, now - self._t_last),
+                                  self.idle_gap_s)
         self._t_last = now
+
+    def record_submit(self, nrows: int) -> None:
+        self._touch(self._clock())
         self.num_queries += nrows
 
     def record_batch(self, nrows: int, dispatches: int = 1) -> None:
         self.num_batches += 1
         self.scan_dispatches += dispatches
         self.batched_rows += nrows
-        self._t_last = time.perf_counter()
+        self._touch(self._clock())
         if nrows > self.max_coalesced:
             self.max_coalesced = nrows
 
@@ -97,10 +131,24 @@ class RetrievalStats:
             else 0.0
 
     def qps(self) -> float:
-        if self._t_first is None or self._t_last is None or \
-                self._t_last <= self._t_first:
+        """Queries per second over the *active* window.
+
+        The old first-to-last-timestamp window had two failure modes:
+        a single flush (submit and batch at nearly the same instant)
+        reported ~0 or wildly inflated rates, and any idle gap between
+        bursts deflated the rate toward zero. The active window sums
+        inter-event gaps clipped to ``idle_gap_s``, so bursts separated
+        by idle time report the rate *within* the bursts."""
+        if self.num_queries == 0 or self._t_first is None:
             return 0.0
-        return self.num_queries / (self._t_last - self._t_first)
+        window = self._active_s
+        if window <= 0.0:
+            # only one recorded instant so far: measure to "now",
+            # clipped to the idle gap, so a single flush reports a
+            # finite rate instead of 0.0
+            window = min(max(self._clock() - self._t_first, 1e-9),
+                         self.idle_gap_s)
+        return self.num_queries / window
 
     def snapshot(self) -> Dict[str, object]:
         """The Fig. 9/10-style breakdown the benchmark emits."""

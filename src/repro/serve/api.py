@@ -114,6 +114,10 @@ class RalmRequest:
     rng: Optional[jax.Array] = None
     trace: Optional[list] = None
     request_id: Optional[int] = None     # assigned at submit()
+    trace_id: Optional[int] = None       # observability flow id: defaults
+    #                                      to request_id at submit(); links
+    #                                      this request's spans/flow events
+    #                                      across tracks in the trace
     tenant: str = "default"
     on_token: Optional[Callable[[int, np.ndarray], None]] = None
     cancelled: bool = False
@@ -173,6 +177,14 @@ class EngineConfig:
     attn_interpret: Optional[bool] = None  # Pallas interpret mode for
     #                                      the decode-attn kernel (CPU
     #                                      containers need True)
+    trace: bool = False                  # enable the observability
+    #                                      tracer (repro.obs): per-request
+    #                                      spans across scheduler waves,
+    #                                      retrieval stages, KV pool and
+    #                                      kernels, exported as Chrome
+    #                                      trace-event JSON
+    trace_path: Optional[str] = None     # where RalmEngine.write_trace()
+    #                                      saves the trace by default
     attn_seq_block: int = 16             # KV-pool seq-axis alignment:
     #                                      per-wave attention reads crop
     #                                      to this quantum (kv_len), so
@@ -326,8 +338,9 @@ class AsyncRetriever:
             return _resolve_from_tables(self.payload_tokens,
                                         self.chunk_table, ids, kind)
         t0 = time.perf_counter()
-        out = _resolve_from_tables(self.payload_tokens, self.chunk_table,
-                                   ids, kind)
-        jax.block_until_ready(out)
+        with self.service.tracer.span("retrieval.gather", "retrieval"):
+            out = _resolve_from_tables(self.payload_tokens,
+                                       self.chunk_table, ids, kind)
+            jax.block_until_ready(out)
         self.service.stats.gather.add(time.perf_counter() - t0)
         return out

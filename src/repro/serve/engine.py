@@ -56,6 +56,7 @@ from repro.core.rag import RagConfig
 from repro.launch.mesh import make_mesh_for
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.api import (DistributedRetriever, EngineConfig,
                              RalmRequest, RalmResponse, Retriever)
 from repro.serve.kvpool import KVCachePool, next_pow2
@@ -276,7 +277,8 @@ class RalmEngine:
                  wave: bool = True, kv_slots: Optional[int] = None,
                  attn_backend: Optional[str] = None,
                  attn_interpret: Optional[bool] = None,
-                 attn_seq_block: int = 16):
+                 attn_seq_block: int = 16,
+                 tracer: Optional[Tracer] = None):
         """``wave=True`` (default) decodes every active sequence in one
         dispatch per scheduler wave over a slotted ``KVCachePool``;
         ``wave=False`` keeps the per-sequence oracle loop (one dispatch
@@ -321,6 +323,32 @@ class RalmEngine:
         self.times: Optional[PoolTimes] = getattr(backend, "times", None)
         self.scheduler = RalmScheduler(self, max_active=max_active)
         self._unclaimed: List[RalmResponse] = []
+        self.tracer = NULL_TRACER
+        self.trace_path: Optional[str] = None
+        if tracer is not None:
+            self.set_tracer(tracer)
+
+    # -- observability ------------------------------------------------------
+
+    def set_tracer(self, tracer: Tracer) -> None:
+        """Install a tracer and propagate it to every component the
+        engine owns a span site in: the retrieval service (scan/merge/
+        queue-wait/gather) and the KV pool (alloc/release/recompile).
+        Components created later (the lazy pool) pick it up at
+        construction."""
+        self.tracer = tracer
+        service = getattr(self.retriever, "service", None)
+        if service is not None:
+            service.tracer = tracer
+        if self.pool is not None:
+            self.pool.tracer = tracer
+
+    def write_trace(self, path: Optional[str] = None) -> str:
+        """Dump the trace buffer as Chrome trace-event JSON. ``path``
+        defaults to ``EngineConfig.trace_path`` or ``trace.json``."""
+        path = path or self.trace_path or "trace.json"
+        self.tracer.write(path)
+        return path
 
     @property
     def decode_dispatches(self) -> int:
@@ -438,6 +466,9 @@ class RalmEngine:
                                  attn_interpret=config.attn_interpret,
                                  attn_seq_block=config.attn_seq_block)
         eng.scheduler.max_active = config.max_active
+        if config.trace:
+            eng.set_tracer(Tracer(enabled=True))
+        eng.trace_path = config.trace_path
         return eng
 
     # -- KV-cache pool admission (wave mode) --------------------------------
@@ -473,6 +504,7 @@ class RalmEngine:
                                     self.max_seq or need_seq,
                                     fixed=self.kv_slots is not None,
                                     seq_block=self.attn_seq_block)
+            self.pool.tracer = self.tracer
         pool = self.pool
         if self.max_seq is None and need_seq > pool.max_seq:
             pool.grow_seq(need_seq)
@@ -496,26 +528,47 @@ class RalmEngine:
         the request itself holds no cache."""
         B, T0 = request.prompt.shape
         request.times.admit = time.perf_counter()
-        if self.wave:
-            pool = self._ensure_pool(B, T0 + request.steps)
-            slots = pool.alloc(B)
+        tr = self.tracer
+        if tr.enabled:
+            # retroactive span on the request track: the queue wait
+            # started back at submit() (times.arrival), which predates
+            # this call — plus the flow arrow Perfetto draws from here
+            # to wherever this request's first token lands (see _emit)
+            args = {"request_id": request.request_id,
+                    "trace_id": request.trace_id, "tenant": request.tenant,
+                    "rows": B}
+            if request.times.arrival is not None:
+                tr.complete("queue.wait", "requests",
+                            request.times.arrival,
+                            request.times.admit - request.times.arrival,
+                            args=args)
+            if request.trace_id is not None:
+                tr.flow_start(request.trace_id)
+        with tr.span("sched.admit", "requests",
+                     args={"request_id": request.request_id,
+                           "rows": B, "prompt_len": T0}
+                     if tr.enabled else None):
+            if self.wave:
+                pool = self._ensure_pool(B, T0 + request.steps)
+                slots = pool.alloc(B)
+                caches, enc_states, logits0, hidden0 = \
+                    self.backend.prefill(self.rag, request.prompt,
+                                         pool.max_seq)
+                pool.write_prefill(slots, caches)
+                if enc_states is not None:
+                    pool.write_enc(slots, enc_states)
+                return SequenceState(
+                    request=request, caches=None, enc_states=None,
+                    out=[request.prompt], cur=request.prompt[:, -1:],
+                    t0=T0, logits0=logits0, hidden0=hidden0,
+                    rng=request.rng, slots=slots)
+            max_seq = self.max_seq or (T0 + request.steps)
             caches, enc_states, logits0, hidden0 = self.backend.prefill(
-                self.rag, request.prompt, pool.max_seq)
-            pool.write_prefill(slots, caches)
-            if enc_states is not None:
-                pool.write_enc(slots, enc_states)
+                self.rag, request.prompt, max_seq)
             return SequenceState(
-                request=request, caches=None, enc_states=None,
+                request=request, caches=caches, enc_states=enc_states,
                 out=[request.prompt], cur=request.prompt[:, -1:], t0=T0,
-                logits0=logits0, hidden0=hidden0, rng=request.rng,
-                slots=slots)
-        max_seq = self.max_seq or (T0 + request.steps)
-        caches, enc_states, logits0, hidden0 = self.backend.prefill(
-            self.rag, request.prompt, max_seq)
-        return SequenceState(
-            request=request, caches=caches, enc_states=enc_states,
-            out=[request.prompt], cur=request.prompt[:, -1:], t0=T0,
-            logits0=logits0, hidden0=hidden0, rng=request.rng)
+                logits0=logits0, hidden0=hidden0, rng=request.rng)
 
     def dispatch_decode(self, seq: SequenceState
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -632,10 +685,14 @@ class RalmEngine:
         max_pos = int(positions.max())
         tokens, slots, positions = pool.pad_wave(tokens, slots, positions)
         kv_len = pool.attn_len(max_pos, bucket=len(slots))
-        logits, pool.caches, hidden = self.backend.decode_wave(
-            pool.caches, tokens, jnp.asarray(slots),
-            jnp.asarray(positions), enc_states=pool.gather_enc(slots),
-            kv_len=kv_len, attn_spec=self.attn_spec)
+        tr = self.tracer
+        with tr.span("wave.decode", "wave",
+                     args={"rows": len(wave), "bucket": len(slots),
+                           "kv_len": kv_len} if tr.enabled else None):
+            logits, pool.caches, hidden = self.backend.decode_wave(
+                pool.caches, tokens, jnp.asarray(slots),
+                jnp.asarray(positions), enc_states=pool.gather_enc(slots),
+                kv_len=kv_len, attn_spec=self.attn_spec)
         off = 0
         for i, seq in wave:
             B = seq.cur.shape[0]
@@ -742,11 +799,11 @@ class RalmEngine:
             self._emit(seq, jax.random.categorical(
                 k, rows[i]).astype(jnp.int32))
 
-    @staticmethod
-    def _emit(seq: SequenceState, nxt: jnp.ndarray) -> None:
+    def _emit(self, seq: SequenceState, nxt: jnp.ndarray) -> None:
         seq.cur = nxt[:, None]
         seq.out.append(seq.cur)
         req = seq.request
+        first = req.times.first_token is None
         if req.on_token is not None:
             # the streaming hook needs host tokens, which forces the
             # wave's device work to complete here — one sync per wave
@@ -754,13 +811,18 @@ class RalmEngine:
             # first-token timestamp is taken AFTER the sync so TTFT
             # measures token availability, not dispatch.
             host = np.asarray(nxt)
-            if req.times.first_token is None:
+            if first:
                 req.times.first_token = time.perf_counter()
             req.on_token(seq.step, host)
-        elif req.times.first_token is None:
+        elif first:
             # no streaming consumer: stamp dispatch time (approximate —
             # jax async dispatch means the value may still be in flight)
             req.times.first_token = time.perf_counter()
+        if first and req.trace_id is not None and self.tracer.enabled:
+            # close the TTFT flow arrow opened at admission: Perfetto
+            # draws queue.wait -> the wave that produced the first token
+            self.tracer.flow_end(req.trace_id, track="wave",
+                                 t_s=req.times.first_token)
         seq.step += 1
 
     # -- serving API --------------------------------------------------------

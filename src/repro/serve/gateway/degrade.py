@@ -203,6 +203,14 @@ class DegradePolicy:
                 t=time.perf_counter() if now is None else now,
                 level=self.level, name=self.ladder[self.level].name,
                 queue_depth=queue_depth))
+            # getattr: test stubs pass bare engine doubles with no tracer
+            tracer = getattr(self.engine, "tracer", None)
+            if tracer is not None and tracer.enabled:
+                tracer.instant(
+                    "degrade.transition", "gateway",
+                    args=dict(level=self.level,
+                              name=self.ladder[self.level].name,
+                              queue_depth=queue_depth))
         return changed
 
     def stats(self) -> Dict[str, object]:

@@ -13,7 +13,16 @@ no framework deps), OpenAI-compatible:
     GET  /v1/models        the one deployed model
     GET  /healthz          liveness (incl. the step thread)
     GET  /statsz           scheduler queue depths/ages, admission and
-                           degrade counters, pool + retrieval stats
+                           degrade counters, pool + retrieval + kernel
+                           stats, plus a snapshot of the metrics
+                           registry (the JSON view of /metricsz)
+    GET  /metricsz         Prometheus text exposition of the same
+                           registry (repro.obs: TTFT/TPOT/queue-wait
+                           histograms with reservoir p50/p95/p99, pool /
+                           retrieval / admission / degrade families)
+    GET  /tracez           Chrome trace-event JSON export of the
+                           engine's tracer buffer (?clear=1 drains it —
+                           the per-load-level boundary the loadgen uses)
 
 Architecture — two threads, one engine:
 
@@ -49,6 +58,10 @@ from typing import Dict, List, Optional, Set, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import registry as kernel_registry
+from repro.obs.adapters import bind_gateway_metrics
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serve.api import RalmRequest
 from repro.serve.gateway.admission import (AdmissionController, TenantQuota,
                                            Verdict)
@@ -119,6 +132,18 @@ class Gateway:
         self.cancelled = 0
         self.disconnects = 0
         self.tokens_out = 0
+        # observability plane: the engine's tracer (NULL when tracing is
+        # off) + one metrics registry absorbing every stats object via
+        # scrape-time collectors (repro.obs.adapters)
+        self.tracer = getattr(engine, "tracer", NULL_TRACER)
+        self.metrics = MetricsRegistry()
+        self.ttft_hist = self.metrics.histogram(
+            "ralm_ttft_seconds", "time to first token, server-side")
+        self.tpot_hist = self.metrics.histogram(
+            "ralm_tpot_seconds", "per-output-token time, server-side")
+        self.queue_wait_hist = self.metrics.histogram(
+            "ralm_queue_wait_seconds", "arrival -> admission wait")
+        bind_gateway_metrics(self.metrics, self)
 
     # ------------------------------------------------------------------
     # step-loop thread: the only thread that touches the engine/jax
@@ -194,9 +219,18 @@ class Gateway:
             self.cancelled += 1
         else:
             self.completions += 1
+        times = resp.times
+        if times is not None:
+            ttft = times.ttft_s()
+            if ttft is not None:
+                self.ttft_hist.observe(ttft)
+            tpot = times.tpot_s(resp.steps)
+            if tpot is not None:
+                self.tpot_hist.observe(tpot)
+            if times.admit is not None and times.arrival is not None:
+                self.queue_wait_hist.observe(times.admit - times.arrival)
         if stream is None:
             return
-        times = resp.times
         summary = dict(
             steps=resp.steps,
             cancelled=resp.cancelled,
@@ -354,6 +388,7 @@ class Gateway:
             if parsed is None:
                 return
             method, path, headers, body = parsed
+            path, _, query = path.partition("?")
             if body is None:
                 self._error(writer, 413, "request body too large")
             elif method == "GET" and path == "/healthz":
@@ -363,6 +398,16 @@ class Gateway:
                                   "step_thread_alive": alive})
             elif method == "GET" and path == "/statsz":
                 self._write_json(writer, 200, self.stats())
+            elif method == "GET" and path == "/metricsz":
+                payload = self.metrics.render().encode()
+                writer.write(self._head(
+                    200, ctype="text/plain; version=0.0.4",
+                    length=len(payload)) + payload)
+            elif method == "GET" and path == "/tracez":
+                doc = self.tracer.export()
+                if "clear=1" in query.split("&"):
+                    self.tracer.clear()
+                self._write_json(writer, 200, doc)
             elif method == "GET" and path == "/v1/models":
                 self._write_json(writer, 200, {
                     "object": "list",
@@ -529,10 +574,20 @@ class Gateway:
             out["kv_pool"] = dict(capacity=eng.pool.capacity,
                                   used=eng.pool.num_used,
                                   high_water=ps.high_water,
-                                  waves=ps.waves)
+                                  waves=ps.waves,
+                                  decode_compiles=ps.decode_compiles,
+                                  skip_fraction=ps.skip_fraction(),
+                                  blocks_total=ps.blocks_total,
+                                  blocks_skipped=ps.blocks_skipped)
+        # degraded kernel routing must be visible in production, not
+        # just under pytest: per-op pallas->ref fallback decisions
+        out["kernels"] = dict(
+            fallbacks=kernel_registry.fallback_counts(),
+            fallback_total=kernel_registry.fallback_count())
         service = getattr(eng.retriever, "service", None)
         if service is not None:
             out["retrieval"] = service.stats.snapshot()
+        out["metrics"] = self.metrics.snapshot()
         return out
 
     async def start(self) -> str:

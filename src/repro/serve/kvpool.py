@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_TRACER
 from repro.retrieval.service import next_pow2
 
 __all__ = ["KVCachePool", "PoolStats", "next_pow2"]
@@ -113,6 +114,7 @@ class KVCachePool:
         self.enc: Optional[jnp.ndarray] = None   # [P+1, S_enc, d], lazy
         self._free: List[int] = list(range(capacity))
         self.stats = PoolStats()
+        self.tracer = NULL_TRACER    # engine.set_tracer swaps a live one in
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -138,11 +140,20 @@ class KVCachePool:
         slots, self._free = self._free[:n], self._free[n:]
         self.stats.allocs += n
         self.stats.high_water = max(self.stats.high_water, self.num_used)
+        if self.tracer.enabled:
+            self.tracer.instant("kvpool.alloc", "kvpool",
+                                args={"rows": n, "used": self.num_used,
+                                      "capacity": self.capacity})
         return np.asarray(slots, np.int32)
 
     def release(self, slots: np.ndarray) -> None:
         self._free.extend(int(s) for s in slots)
         self.stats.releases += len(slots)
+        if self.tracer.enabled:
+            self.tracer.instant("kvpool.release", "kvpool",
+                                args={"rows": len(slots),
+                                      "used": self.num_used,
+                                      "capacity": self.capacity})
 
     # -- wave shape bucketing ----------------------------------------------
 
@@ -165,8 +176,19 @@ class KVCachePool:
         nb_full = self.max_seq // self.seq_block
         self.stats.blocks_total += nb_full
         self.stats.blocks_skipped += nb_full - kv_len // self.seq_block
-        self.stats.compiled.add((bucket, kv_len, self.capacity,
-                                 self.max_seq))
+        key = (bucket, kv_len, self.capacity, self.max_seq)
+        if key not in self.stats.compiled:
+            self.stats.compiled.add(key)
+            # a new graph key means jit will trace+compile a fresh
+            # decode_wave variant on this step — the recompile stall is
+            # worth a mark in the trace
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "jit.decode_compile", "kernels",
+                    args={"bucket": bucket, "kv_len": kv_len,
+                          "capacity": self.capacity,
+                          "max_seq": self.max_seq,
+                          "graphs": len(self.stats.compiled)})
         return kv_len
 
     def bucket(self, n: int) -> int:

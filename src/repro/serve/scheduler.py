@@ -77,6 +77,10 @@ class RalmScheduler:
                 f"request_id {request.request_id} already issued")
         self._issued.add(request.request_id)
         self._next_id = max(self._next_id, request.request_id) + 1
+        if request.trace_id is None:
+            # the observability flow id linking this request's spans
+            # across tracks; request_id is already unique per engine
+            request.trace_id = request.request_id
         if request.times.arrival is None:
             request.times.arrival = time.perf_counter()
         self.queue.append(request)
@@ -188,11 +192,21 @@ class RalmScheduler:
 
     def _step_wave(self) -> List[RalmResponse]:
         """Wave-batched step body: one dispatch per phase for the whole
-        active set (see the module docstring for the phases)."""
-        decoded = self.engine.dispatch_wave(self.active)
-        searches = self.engine.dispatch_search_wave(self.active, decoded)
-        self.engine.flush_searches()
-        self.engine.finish_wave(self.active, decoded, searches)
+        active set (see the module docstring for the phases). The phase
+        spans all land on the "wave" track, nested under one sched.step
+        span per wave, so a Perfetto timeline shows decode / search /
+        finish as adjacent slices of each step."""
+        tr = self.engine.tracer
+        with tr.span("sched.step", "wave",
+                     args={"active": len(self.active)}
+                     if tr.enabled else None):
+            decoded = self.engine.dispatch_wave(self.active)
+            with tr.span("wave.search", "wave"):
+                searches = self.engine.dispatch_search_wave(
+                    self.active, decoded)
+                self.engine.flush_searches()
+            with tr.span("wave.finish", "wave"):
+                self.engine.finish_wave(self.active, decoded, searches)
         finished: List[RalmResponse] = []
         still_active = []
         for seq in self.active:
