@@ -21,6 +21,12 @@ against the legacy full-seq einsum over (batch, pool seq, window, GQA
 ratio) and writes ``BENCH_decode_attn.json`` (see
 benchmarks/decode_attn_bench.py).
 
+``--mode speculation`` sweeps speculative retrieval (speculate_k x
+interval x wave size) against a speculation-off baseline over a
+run-structured corpus and merges a ``speculation`` section — acceptance
+rate, rollback counts, net hidden fraction of the per-step retrieval
+block — into ``BENCH_serve.json`` (see benchmarks/speculation_bench.py).
+
 ``--mode traffic`` drives the HTTP serving gateway with a closed-loop
 capacity calibration plus an open-loop Poisson sweep (heavy-tailed
 lengths, multi-tenant, up to 2x overload) and merges a ``traffic``
@@ -39,7 +45,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["figures", "retrieval", "serve", "kernels",
-                             "decode-attn", "traffic"],
+                             "decode-attn", "traffic", "speculation"],
                     default="figures")
     ap.add_argument("--out", default=None,
                     help="output path for the sweep modes")
@@ -63,6 +69,11 @@ def main() -> None:
     if args.mode == "serve":
         from benchmarks import serve_bench
         serve_bench.main(args.out or "BENCH_serve.json")
+        return
+
+    if args.mode == "speculation":
+        from benchmarks import speculation_bench
+        speculation_bench.main(args.out or "BENCH_serve.json")
         return
 
     if args.mode == "traffic":

@@ -47,6 +47,16 @@ def main() -> None:
                          "(wave coalescing + result cache)")
     ap.add_argument("--retrieval-cache", type=int, default=0,
                     help="RetrievalService LRU cache entries (0 = off)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="speculative retrieval depth: due steps decode "
+                         "ahead on stale neighbors while the real search "
+                         "runs async; verified (and rolled back on "
+                         "mismatch) k waves later. Requires "
+                         "--async-retrieval. 0 = off")
+    ap.add_argument("--no-speculate-verify", action="store_true",
+                    help="skip verify-and-rollback: trust stale "
+                         "neighbors outright (bounded quality drift, "
+                         "zero rollback cost)")
     ap.add_argument("--no-retrieval-measure", action="store_true",
                     help="drop the per-flush stage-timing host blocks "
                          "(maximum decode/search overlap; the stats line "
@@ -118,6 +128,8 @@ def main() -> None:
                            async_retrieval=args.async_retrieval,
                            retrieval_cache=args.retrieval_cache,
                            retrieval_measure=not args.no_retrieval_measure,
+                           speculate_k=args.speculate_k,
+                           speculate_verify=not args.no_speculate_verify,
                            wave_decode=not args.per_sequence,
                            kv_slots=args.kv_slots,
                            kernel_backend=args.kernel_backend,
@@ -186,6 +198,13 @@ def main() -> None:
                      f"scan {st.scan.mean_s * 1e6:.0f}us "
                      f"merge {st.merge.mean_s * 1e6:.0f}us")
         print(line)
+        if st.spec_issued:
+            print(f"[serve] speculation: {st.spec_issued} issued, "
+                  f"{st.spec_accepted}/{st.spec_verified} accepted "
+                  f"({st.spec_acceptance_rate():.0%}), "
+                  f"{st.spec_rollbacks} rollbacks "
+                  f"({st.spec_replayed_steps} steps replayed), "
+                  f"residual wait {st.spec_wait.mean_s * 1e6:.0f}us/wave")
 
     if args.trace:
         print(f"[serve] trace written to {engine.write_trace()} "

@@ -64,6 +64,31 @@ def bind_engine_metrics(registry: MetricsRegistry, engine) -> None:
     ret_stage = registry.gauge(
         "ralm_retrieval_stage_seconds",
         "per-stage latency summary (mean/max/p50/p99), seconds")
+    spec_issued = registry.counter(
+        "ralm_spec_issued_total",
+        "speculative retrievals issued (due steps that decoded ahead "
+        "on stale neighbors)")
+    spec_verified = registry.counter(
+        "ralm_spec_verified_total",
+        "speculation points verified, by outcome")
+    spec_landed = registry.counter(
+        "ralm_spec_landed_total",
+        "speculation points whose search results had already "
+        "materialized at harvest (latency fully hidden behind decode)")
+    spec_discarded = registry.counter(
+        "ralm_spec_discarded_total",
+        "speculation points dropped unverified (rollback cascade / "
+        "cancel / flush)")
+    spec_replayed = registry.counter(
+        "ralm_spec_replayed_steps_total",
+        "decode steps redone during rollback replay")
+    spec_accept = registry.gauge(
+        "ralm_spec_acceptance_rate",
+        "fraction of verified speculation points whose token matched")
+    spec_stage = registry.gauge(
+        "ralm_spec_stage_seconds",
+        "speculation stage latency summary (spec_wait = residual "
+        "retrieval block, spec_replay = rollback cost), seconds")
 
     def collect() -> None:
         pool = engine.pool
@@ -89,6 +114,8 @@ def bind_engine_metrics(registry: MetricsRegistry, engine) -> None:
             ret_cache.set_total(st.cache_hits, labels={"result": "hit"})
             ret_cache.set_total(st.cache_misses,
                                 labels={"result": "miss"})
+            ret_cache.set_total(st.cache_stale,
+                                labels={"result": "stale"})
             ret_coalesce.set(st.coalescing_factor())
             ret_qps.set(st.qps())
             for stage in _STAGES:
@@ -101,6 +128,21 @@ def bind_engine_metrics(registry: MetricsRegistry, engine) -> None:
                               labels={"stage": stage, "stat": "p50"})
                 ret_stage.set(stat.p99_s(),
                               labels={"stage": stage, "stat": "p99"})
+            spec_issued.set_total(st.spec_issued)
+            spec_verified.set_total(st.spec_accepted,
+                                    labels={"outcome": "accepted"})
+            spec_verified.set_total(st.spec_rollbacks,
+                                    labels={"outcome": "rollback"})
+            spec_landed.set_total(st.spec_landed)
+            spec_discarded.set_total(st.spec_discarded)
+            spec_replayed.set_total(st.spec_replayed_steps)
+            spec_accept.set(st.spec_acceptance_rate())
+            for stage in ("spec_wait", "spec_replay"):
+                stat = getattr(st, stage)
+                spec_stage.set(stat.mean_s,
+                               labels={"stage": stage, "stat": "mean"})
+                spec_stage.set(stat.p99_s(),
+                               labels={"stage": stage, "stat": "p99"})
 
     registry.register_collector(collect)
 

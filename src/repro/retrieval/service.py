@@ -62,6 +62,12 @@ class ServiceConfig:
     #                               insert) — it trades async overlap for
     #                               skipping whole kernel dispatches
     cache_quant: float = 1e-3     # query quantization step for cache keys
+    cache_partial: bool = True    # per-row cache hits: cached rows are
+    #                               served immediately and ONLY the
+    #                               missed rows go to the kernel (the
+    #                               flush stitches the batch back
+    #                               together). False restores the old
+    #                               all-or-nothing batch lookup.
     merge_fanout: Optional[int] = None  # None = flat K-selection;
     #                               >= 2 = hierarchical tree merge
     measure: bool = True          # block per stage to record scan/merge
@@ -227,6 +233,13 @@ class _InFlight:
     submit_t: float
     result_d: Optional[jnp.ndarray] = None   # [nrows, K] once complete
     result_i: Optional[jnp.ndarray] = None
+    kernel_rows: int = -1                    # rows the kernel must serve
+    #                                          (< nrows on a partial
+    #                                          cache hit); -1 = nrows
+    stitch: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    #                                          (dists, ids, hit mask) of
+    #                                          the cached rows to merge
+    #                                          with the kernel rows
 
 
 class SearchHandle:
@@ -254,6 +267,13 @@ class SearchHandle:
         self._service._retire(self._entry)
         return self._entry.result_d, self._entry.result_i
 
+    def cancel(self) -> None:
+        """Drop the handle without consuming its result (speculation
+        points discarded by a rollback or a cancelled request). A still-
+        pending batch is computed and thrown away at the next flush —
+        abandoned results must not wedge the in-flight table."""
+        self._service._retire(self._entry)
+
 
 class RetrievalService:
     """Deadline-batched, cached, instrumented front door to ChamVS."""
@@ -265,7 +285,8 @@ class RetrievalService:
         self.tracer = NULL_TRACER   # engine.set_tracer swaps a live one in
         self.cache: Optional[QueryCache] = (
             QueryCache(self.config.cache_entries,
-                       quant=self.config.cache_quant)
+                       quant=self.config.cache_quant,
+                       partial=self.config.cache_partial)
             if self.config.cache_entries > 0 else None)
         self._inflight: Dict[int, _InFlight] = {}
         self._pending: List[Tuple[_InFlight, jnp.ndarray]] = []
@@ -339,18 +360,41 @@ class RetrievalService:
         self._inflight[entry.ticket] = entry
         self.stats.record_submit(entry.nrows)
 
+        q_kernel = q
         if self.cache is not None:
+            stale0 = self.cache.stale
             hit = self.cache.get_batch(np.asarray(q))
-            if hit is not None:
+            self.stats.cache_stale += self.cache.stale - stale0
+            if hit is not None and len(hit) == 2:
+                # all-or-nothing full hit (either cache mode)
                 entry.result_d = jnp.asarray(hit[0])
                 entry.result_i = jnp.asarray(hit[1])
                 self.stats.cache_hits += entry.nrows
                 self.stats.queue_wait.add(0.0)
                 return SearchHandle(self, entry)
-            self.stats.cache_misses += entry.nrows
+            if hit is not None:
+                # partial per-row hit: serve the cached rows now, send
+                # ONLY the missed rows to the kernel; flush stitches
+                dists, ids, mask = hit
+                nhit = int(mask.sum())
+                if nhit == entry.nrows:
+                    entry.result_d = jnp.asarray(dists)
+                    entry.result_i = jnp.asarray(ids)
+                    self.stats.cache_hits += entry.nrows
+                    self.stats.queue_wait.add(0.0)
+                    return SearchHandle(self, entry)
+                entry.stitch = (dists, ids, mask)
+                entry.kernel_rows = entry.nrows - nhit
+                q_kernel = q[jnp.asarray(np.flatnonzero(~mask))]
+                self.stats.cache_hits += nhit
+                self.stats.cache_misses += entry.kernel_rows
+            else:
+                self.stats.cache_misses += entry.nrows
+        if entry.kernel_rows < 0:
+            entry.kernel_rows = entry.nrows
 
-        self._pending.append((entry, q))
-        self._pending_rows += entry.nrows
+        self._pending.append((entry, q_kernel))
+        self._pending_rows += entry.kernel_rows
         if self._pending_rows >= self.config.max_batch:
             self.flush()
         else:
@@ -425,13 +469,49 @@ class RetrievalService:
 
         offset = 0
         for entry, q in pending:
-            entry.result_d = dists[offset:offset + entry.nrows]
-            entry.result_i = ids[offset:offset + entry.nrows]
+            kd = dists[offset:offset + entry.kernel_rows]
+            ki = ids[offset:offset + entry.kernel_rows]
             if self.cache is not None:
-                self.cache.put_batch(np.asarray(q),
-                                     np.asarray(entry.result_d),
-                                     np.asarray(entry.result_i))
-            offset += entry.nrows
+                self.cache.put_batch(np.asarray(q), np.asarray(kd),
+                                     np.asarray(ki))
+            if entry.stitch is not None:
+                # merge the cached rows with the kernel rows back into
+                # submit order (host-side: the cached half already lives
+                # on the host, and the cache insert above synced anyway)
+                cd, ci, mask = entry.stitch
+                full_d = np.array(cd)
+                full_i = np.array(ci)
+                miss = np.flatnonzero(~mask)
+                full_d[miss] = np.asarray(kd)
+                full_i[miss] = np.asarray(ki)
+                entry.result_d = jnp.asarray(full_d)
+                entry.result_i = jnp.asarray(full_i)
+            else:
+                entry.result_d, entry.result_i = kd, ki
+            offset += entry.kernel_rows
+
+    # -- speculation support ------------------------------------------------
+
+    def stale_lookup(self, queries: jnp.ndarray
+                     ) -> Optional[Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Any-generation cache lookup feeding speculative decode: the
+        caller continues on these possibly-stale neighbors while the
+        real search runs, so freshness is a quality hint, not a
+        correctness requirement. None when any row is absent (or the
+        cache is off)."""
+        if self.cache is None:
+            return None
+        hit = self.cache.get_stale(np.asarray(queries, np.float32))
+        if hit is None:
+            return None
+        return jnp.asarray(hit[0]), jnp.asarray(hit[1])
+
+    def mark_cache_stale(self) -> None:
+        """Generation-bump the result cache (quality knob changed):
+        entries stop serving fresh lookups but remain speculation
+        seeds. No-op without a cache."""
+        if self.cache is not None:
+            self.cache.mark_stale()
 
     # -- synchronous convenience -------------------------------------------
 

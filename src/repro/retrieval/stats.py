@@ -89,11 +89,35 @@ class RetrievalStats:
         self.batched_rows = 0         # query rows that reached a dispatch
         self.cache_hits = 0           # query rows answered from cache
         self.cache_misses = 0         # query rows that went to the kernel
+        self.cache_stale = 0          # rows present but generation-stale
+        #                               at a fresh lookup (missed)
         self.max_coalesced = 0        # largest rows-per-dispatch seen
         self.queue_wait = StageStat()
         self.scan = StageStat()
         self.merge = StageStat()
         self.gather = StageStat()
+        # -- speculative retrieval (engine-side, mirrored here so one
+        #    snapshot covers the whole retrieval plane) ----------------
+        self.spec_issued = 0          # speculative dispatches: due steps
+        #                               that decoded ahead on stale
+        #                               neighbors while the real search
+        #                               ran async
+        self.spec_verified = 0        # speculation points verified
+        self.spec_landed = 0          # points whose search results were
+        #                               already materialized when the
+        #                               harvest asked — latency fully
+        #                               hidden behind the decode wave(s)
+        self.spec_accepted = 0        # ... whose emitted token matched
+        self.spec_rollbacks = 0       # ... that mismatched -> rollback
+        self.spec_discarded = 0       # points dropped unverified (later
+        #                               points of a rolled-back sequence,
+        #                               cancelled requests, flushes)
+        self.spec_replayed_steps = 0  # decode steps redone during
+        #                               rollback replay
+        self.spec_wait = StageStat()  # host block at verification: the
+        #                               residual retrieval time NOT
+        #                               hidden behind decode
+        self.spec_replay = StageStat()  # rollback + replay cost per event
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
         self._active_s = 0.0          # accumulated busy window (gaps
@@ -150,6 +174,16 @@ class RetrievalStats:
                          self.idle_gap_s)
         return self.num_queries / window
 
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of verified speculation points whose speculated
+        token matched the real neighbors' (RaLMSpec's headline metric)."""
+        return (self.spec_accepted / self.spec_verified
+                if self.spec_verified else 0.0)
+
+    def spec_rollback_rate(self) -> float:
+        return (self.spec_rollbacks / self.spec_verified
+                if self.spec_verified else 0.0)
+
     def snapshot(self) -> Dict[str, object]:
         """The Fig. 9/10-style breakdown the benchmark emits."""
         return dict(
@@ -160,10 +194,24 @@ class RetrievalStats:
             coalescing_factor=self.coalescing_factor(),
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
+            cache_stale=self.cache_stale,
             max_coalesced=self.max_coalesced,
             qps=self.qps(),
             queue_wait=self.queue_wait.summary(),
             scan=self.scan.summary(),
             merge=self.merge.summary(),
             gather=self.gather.summary(),
+            speculation=dict(
+                issued=self.spec_issued,
+                verified=self.spec_verified,
+                landed=self.spec_landed,
+                accepted=self.spec_accepted,
+                rollbacks=self.spec_rollbacks,
+                discarded=self.spec_discarded,
+                replayed_steps=self.spec_replayed_steps,
+                acceptance_rate=self.spec_acceptance_rate(),
+                rollback_rate=self.spec_rollback_rate(),
+                spec_wait=self.spec_wait.summary(),
+                spec_replay=self.spec_replay.summary(),
+            ),
         )

@@ -148,6 +148,23 @@ class EngineConfig:
     async_retrieval: bool = False        # route search through a
     #                                      RetrievalService (AsyncRetriever)
     retrieval_cache: int = 0             # service LRU cache entries (0=off)
+    speculate_k: int = 0                 # speculative retrieval depth: max
+    #                                      speculation points a sequence
+    #                                      keeps outstanding (0 = off). A
+    #                                      due row decodes ahead on its
+    #                                      previous (stale) neighbors
+    #                                      while the real search runs
+    #                                      async; verification happens
+    #                                      speculate_k waves later, off
+    #                                      the critical path. Requires
+    #                                      async_retrieval + wave_decode.
+    speculate_verify: bool = True        # verify speculated tokens against
+    #                                      the real neighbors and roll
+    #                                      back on mismatch (greedy
+    #                                      parity with speculation off).
+    #                                      False trusts stale neighbors
+    #                                      outright — bounded quality
+    #                                      drift for zero rollback cost
     retrieval_measure: bool = True       # per-stage service timings; False
     #                                      drops the per-flush host blocks
     #                                      for maximum decode/search overlap
@@ -324,6 +341,11 @@ class AsyncRetriever:
 
     def search_async(self, queries: jnp.ndarray) -> SearchHandle:
         return self.service.submit(self._project(queries))
+
+    def stale_lookup(self, queries: jnp.ndarray):
+        """Any-generation cache probe: possibly-stale neighbors to seed
+        speculative decode (None on a miss or without a cache)."""
+        return self.service.stale_lookup(self._project(queries))
 
     def flush(self) -> None:
         self.service.flush()

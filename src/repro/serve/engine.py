@@ -239,6 +239,39 @@ class DisaggregatedBackend:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class SpecPoint:
+    """One outstanding speculation: a retrieval-due step that decoded
+    ahead on stale neighbors while the real search runs async.
+
+    Everything needed to verify later — and to roll back on a mismatch
+    — is captured at emit time: the pre-interpolation LM logits (so the
+    verification interpolation is bit-identical to what the baseline
+    would have computed), the token actually emitted from the stale
+    mix, and the ``seq.out`` length before that emit (the truncation
+    watermark)."""
+    step: int                      # the due step that speculated
+    handle: Any                    # SearchHandle of the real search
+    logits: jnp.ndarray            # [B, V] LM logits at `step`
+    emitted: jnp.ndarray           # [B, 1] token emitted from stale mix
+    out_len: int                   # len(seq.out) BEFORE the emit
+    age: int = 0                   # waves since issue; verified when
+    #                                age reaches the speculation depth
+
+
+class _SpecIssue:
+    """Phase-2a marker for a speculated row: ``finish_wave`` integrates
+    the stale ``(dists, ids)`` instead of blocking on ``handle`` (the
+    real search, resolved by ``spec_harvest`` 1..k waves later)."""
+
+    __slots__ = ("handle", "dists", "ids")
+
+    def __init__(self, handle, dists, ids):
+        self.handle = handle
+        self.dists = dists
+        self.ids = ids
+
+
+@dataclasses.dataclass
 class SequenceState:
     """One active request's decode state (owned by the scheduler).
 
@@ -256,6 +289,12 @@ class SequenceState:
     rng: Optional[jax.Array]
     step: int = 0
     slots: Optional[np.ndarray] = None   # pool rows (wave mode)
+    last_neighbors: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    #                                      most recent VERIFIED (dists,
+    #                                      ids) — the stale neighbors
+    #                                      the next due step speculates
+    #                                      with
+    spec_points: List[SpecPoint] = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
@@ -278,7 +317,9 @@ class RalmEngine:
                  attn_backend: Optional[str] = None,
                  attn_interpret: Optional[bool] = None,
                  attn_seq_block: int = 16,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 speculate_k: int = 0,
+                 speculate_verify: bool = True):
         """``wave=True`` (default) decodes every active sequence in one
         dispatch per scheduler wave over a slotted ``KVCachePool``;
         ``wave=False`` keeps the per-sequence oracle loop (one dispatch
@@ -319,6 +360,37 @@ class RalmEngine:
         self.max_seq = max_seq
         self.wave = wave
         self.kv_slots = kv_slots
+        # -- speculative retrieval (RaLMSpec, arXiv 2401.14021) --------
+        self.speculate_k = int(speculate_k)
+        self.speculate_verify = speculate_verify
+        if self.speculate_k > 0:
+            import warnings
+            if not wave:
+                warnings.warn(
+                    "speculate_k > 0 requires wave decode (the "
+                    "per-sequence oracle path is the thing speculation "
+                    "verifies against) — disabling speculation.",
+                    RuntimeWarning, stacklevel=2)
+                self.speculate_k = 0
+            elif self.cfg.ssm_state > 0 or \
+                    self.cfg.block in ("rwkv6", "hybrid"):
+                warnings.warn(
+                    f"speculate_k > 0 is unsupported for recurrent-state "
+                    f"blocks (block={self.cfg.block!r}, ssm_state="
+                    f"{self.cfg.ssm_state}): the state update cannot be "
+                    "rewound on rollback — disabling speculation.",
+                    RuntimeWarning, stacklevel=2)
+                self.speculate_k = 0
+        # verification depth in waves. Ring (sliding-window) caches
+        # alias KV positions modulo the window, so only a depth-1
+        # rollback rewrites exactly the slots it invalidated — deeper
+        # speculation is clamped for windowed models (see
+        # KVCachePool.rewind).
+        self._spec_depth = self.speculate_k
+        if self.speculate_k > 0 and self.cfg.window > 0 and \
+                "local" in self.cfg.pattern_classes():
+            self._spec_depth = 1
+        self._local_spec_stats = None    # fallback when no service
         self.pool: Optional[KVCachePool] = None   # built at first admission
         self.times: Optional[PoolTimes] = getattr(backend, "times", None)
         self.scheduler = RalmScheduler(self, max_active=max_active)
@@ -364,11 +436,15 @@ class RalmEngine:
                    kv_slots: Optional[int] = None,
                    attn_backend: Optional[str] = None,
                    attn_interpret: Optional[bool] = None,
-                   attn_seq_block: int = 16) -> "RalmEngine":
+                   attn_seq_block: int = 16,
+                   speculate_k: int = 0,
+                   speculate_verify: bool = True) -> "RalmEngine":
         return cls(MonolithicBackend(params, cfg), retriever, rag,
                    max_seq=max_seq, wave=wave, kv_slots=kv_slots,
                    attn_backend=attn_backend, attn_interpret=attn_interpret,
-                   attn_seq_block=attn_seq_block)
+                   attn_seq_block=attn_seq_block,
+                   speculate_k=speculate_k,
+                   speculate_verify=speculate_verify)
 
     @classmethod
     def disaggregated(cls, params, cfg: ModelConfig, rag: RagConfig,
@@ -427,6 +503,14 @@ class RalmEngine:
                 "DistributedRetriever (no RetrievalService coalescing or "
                 "cache).", RuntimeWarning, stacklevel=2)
         if config.disaggregate and len(jax.devices()) >= 2:
+            if config.speculate_k > 0:
+                import warnings
+                warnings.warn(
+                    "EngineConfig.speculate_k is not wired into the "
+                    "disaggregated path (the synchronous "
+                    "DistributedRetriever has no async handles) — "
+                    "speculation stays off.", RuntimeWarning,
+                    stacklevel=2)
             eng = cls.disaggregated(
                 params, config.model, config.rag, datastore.params,
                 datastore.shards, search_cfg,
@@ -447,6 +531,17 @@ class RalmEngine:
                     "async_retrieval=True (the cache lives in the "
                     "RetrievalService) — ignoring it.", RuntimeWarning,
                     stacklevel=2)
+            speculate_k = config.speculate_k
+            if speculate_k > 0 and not config.async_retrieval:
+                import warnings
+                warnings.warn(
+                    "EngineConfig.speculate_k requires "
+                    "async_retrieval=True (speculation hides the "
+                    "RetrievalService's async scan behind decode; a "
+                    "synchronous retriever has nothing to hide) — "
+                    "disabling speculation.", RuntimeWarning,
+                    stacklevel=2)
+                speculate_k = 0
             if config.async_retrieval:
                 from repro.retrieval.service import ServiceConfig
                 retriever = datastore.async_retriever(
@@ -464,7 +559,9 @@ class RalmEngine:
                                  kv_slots=config.kv_slots,
                                  attn_backend=config.attn_backend,
                                  attn_interpret=config.attn_interpret,
-                                 attn_seq_block=config.attn_seq_block)
+                                 attn_seq_block=config.attn_seq_block,
+                                 speculate_k=speculate_k,
+                                 speculate_verify=config.speculate_verify)
         eng.scheduler.max_active = config.max_active
         if config.trace:
             eng.set_tracer(Tracer(enabled=True))
@@ -515,6 +612,17 @@ class RalmEngine:
 
     def release(self, seq: SequenceState) -> None:
         """Return a finished sequence's slot rows to the pool."""
+        if seq.spec_points:
+            # safety net — the scheduler settles points via
+            # spec_finalize before releasing; anything left here
+            # (e.g. a cancelled request) is discarded unverified
+            stats = self.spec_stats
+            for p in seq.spec_points:
+                cancel = getattr(p.handle, "cancel", None)
+                if cancel is not None:
+                    cancel()
+                stats.spec_discarded += 1
+            seq.spec_points.clear()
         if seq.slots is not None and self.pool is not None:
             self.pool.release(seq.slots)
             seq.slots = None
@@ -713,8 +821,25 @@ class RalmEngine:
             return searches
         submit = getattr(self.retriever, "search_async", None)
         if submit is not None:
+            issued = 0
             for i in due:
+                seq = seqs[i]
+                if self._spec_eligible(seq):
+                    src = self._spec_source(seq, decoded[i][1])
+                    if src is not None:
+                        # fire-and-forget: the real search coalesces
+                        # into this wave's flush; decode continues on
+                        # the stale neighbors; spec_harvest verifies
+                        # 1..k waves later, off the critical path
+                        searches[i] = _SpecIssue(submit(decoded[i][1]),
+                                                 src[0], src[1])
+                        self.spec_stats.spec_issued += 1
+                        issued += 1
+                        continue
                 searches[i] = submit(decoded[i][1])
+            if issued and self.tracer.enabled:
+                self.tracer.instant("spec.issue", "wave",
+                                    args={"points": issued})
             return searches
         queries = jnp.concatenate([decoded[i][1] for i in due], axis=0)
         dists, ids = self._search(queries)
@@ -737,9 +862,21 @@ class RalmEngine:
         rows: List[jnp.ndarray] = []
         knn = []                # (row_idx, logits, dists, ids)
         retro = []              # (seq, chunks [B, k*chunk_len])
+        spec_new = []           # (seq, _SpecIssue, logits)
         for seq, out, search in zip(seqs, decoded, searches):
             logits, hidden = out
             if search is not None:
+                if isinstance(search, _SpecIssue):
+                    # speculated row: integrate the STALE neighbors now
+                    # (no result() — the real search stays in flight);
+                    # the trace entry waits for verification, which
+                    # records the real ids
+                    knn.append((len(rows), logits,
+                                jnp.asarray(search.dists),
+                                jnp.asarray(search.ids)))
+                    spec_new.append((seq, search, logits))
+                    rows.append(logits)
+                    continue
                 if hasattr(search, "result"):      # async SearchHandle
                     t0 = time.time()
                     dists, ids = search.result()
@@ -753,6 +890,10 @@ class RalmEngine:
                         dict(step=seq.step, ids=np.asarray(ids)))
                 if rag.mode == "knnlm":
                     knn.append((len(rows), logits, dists, ids))
+                    if self.speculate_k > 0:
+                        # a non-speculated due row still refreshes the
+                        # seed the NEXT due step speculates with
+                        seq.last_neighbors = (dists, ids)
                 elif rag.mode == "retro" and self.cfg.arch == "encdec":
                     retro.append((seq, ids))
             rows.append(logits)
@@ -798,6 +939,14 @@ class RalmEngine:
             seq.rng, k = jax.random.split(seq.rng)
             self._emit(seq, jax.random.categorical(
                 k, rows[i]).astype(jnp.int32))
+        # register the wave's speculation points AFTER the emits so each
+        # captures the token it produced and the pre-emit out length
+        # (eligibility guarantees these rows are greedy, so `seq.cur`
+        # now holds the token the stale mix argmax'd)
+        for seq, issue, logits in spec_new:
+            seq.spec_points.append(SpecPoint(
+                step=seq.step - 1, handle=issue.handle, logits=logits,
+                emitted=seq.cur, out_len=len(seq.out) - 1))
 
     def _emit(self, seq: SequenceState, nxt: jnp.ndarray) -> None:
         seq.cur = nxt[:, None]
@@ -824,6 +973,251 @@ class RalmEngine:
             self.tracer.flow_end(req.trace_id, track="wave",
                                  t_s=req.times.first_token)
         seq.step += 1
+
+    # -- speculative retrieval (RaLMSpec, arXiv 2401.14021) -----------------
+
+    @property
+    def spec_stats(self):
+        """Where speculation counters land: the retrieval service's
+        ``RetrievalStats`` when one exists (so /statsz and the bench see
+        one retrieval plane), else a local instance."""
+        service = getattr(self.retriever, "service", None)
+        if service is not None:
+            return service.stats
+        if self._local_spec_stats is None:
+            from repro.retrieval.stats import RetrievalStats
+            self._local_spec_stats = RetrievalStats()
+        return self._local_spec_stats
+
+    def _spec_eligible(self, seq: SequenceState) -> bool:
+        """Per-row speculation gate, evaluated at each due step (the
+        degrade ladder mutates ``rag`` between waves, so this cannot be
+        decided at construction): greedy kNN-LM rows only — sampling
+        consumes rng state a rollback cannot restore, and a streaming
+        consumer (``on_token``) would have already seen tokens a
+        rollback retracts."""
+        req = seq.request
+        return (self.speculate_k > 0
+                and self.rag.mode == "knnlm"
+                and (req.greedy or seq.rng is None)
+                and req.on_token is None
+                and len(seq.spec_points) < self.speculate_k)
+
+    def _spec_source(self, seq: SequenceState, hidden: jnp.ndarray):
+        """The stale neighbors to decode ahead with: the sequence's
+        last verified result, else a stale-tolerant cache probe (a
+        cross-request seed — partial-batch cache hits feeding
+        speculation), else None (the row searches synchronously and
+        seeds the next due step)."""
+        if seq.last_neighbors is not None:
+            return seq.last_neighbors
+        lookup = getattr(self.retriever, "stale_lookup", None)
+        if lookup is not None:
+            return lookup(hidden)
+        return None
+
+    def spec_harvest(self, seqs: List[SequenceState],
+                     decoded: Optional[List] = None,
+                     force: bool = False) -> None:
+        """Verify speculation points whose real search has had
+        ``_spec_depth`` waves to land (all of them under ``force``).
+
+        Verification compares *emitted tokens*, not neighbor ids: the
+        point's saved pre-interpolation logits are re-mixed with the
+        REAL (dists, tokens) — exactly the baseline's ``finish_step``
+        math — and the argmax is compared against the token the stale
+        mix emitted. Match -> the speculated timeline IS the baseline
+        timeline (accept). Mismatch -> roll back and replay
+        (``_spec_rollback``). The forcing of the in-flight results is
+        timed into ``spec_wait`` — the residual retrieval time NOT
+        hidden behind decode, the bench's numerator."""
+        pts: List[Tuple[Optional[int], SequenceState, SpecPoint]] = []
+        for idx, seq in enumerate(seqs):
+            if not seq.spec_points:
+                continue
+            for p in seq.spec_points:
+                p.age += 1
+            take = 0
+            for p in seq.spec_points:
+                if force or p.age >= self._spec_depth:
+                    take += 1
+                else:
+                    break
+            for p in seq.spec_points[:take]:
+                pts.append((idx if decoded is not None else None, seq, p))
+            del seq.spec_points[:take]
+        if not pts:
+            return
+        stats = self.spec_stats
+        tr = self.tracer
+        rag = self.rag
+        with tr.span("spec.verify", "wave",
+                     args={"points": len(pts), "force": force}
+                     if tr.enabled else None):
+            t0 = time.perf_counter()
+            res = [p.handle.result() for _, _, p in pts]
+            # spec_wait times ONLY the forcing of the in-flight search
+            # results. XLA drains its queue in enqueue order, so this
+            # wait excludes the decode wave dispatched after the scan —
+            # it is the residual retrieval time the overlap failed to
+            # hide, comparable to the baseline's queue_wait + scan.
+            # Results already materialized (is_ready) were fully hidden.
+            for d, i in res:
+                ready_d = getattr(d, "is_ready", None)
+                ready_i = getattr(i, "is_ready", None)
+                if (ready_d is None or ready_d()) and \
+                        (ready_i is None or ready_i()):
+                    stats.spec_landed += 1
+            jax.block_until_ready([x for pair in res for x in pair])
+            stats.spec_wait.add(time.perf_counter() - t0)
+            if not self.speculate_verify:
+                # trust-the-stale mode: adopt the real neighbors as the
+                # next seed, never compare, never roll back
+                for (_, seq, _), (d, i) in zip(pts, res):
+                    seq.last_neighbors = (d, i)
+                return
+            # ONE batched interpolate + argmax + host sync over every
+            # point being verified this wave; this math is NOT counted
+            # in spec_wait — the baseline pays the same interpolate in
+            # its finish phase
+            d_cat = jnp.concatenate([d for d, _ in res], axis=0)
+            i_cat = jnp.concatenate([i for _, i in res], axis=0)
+            logits_cat = jnp.concatenate([p.logits for _, _, p in pts],
+                                         axis=0)
+            toks = self.retriever.resolve(i_cat, kind="tokens")
+            mixed = rag_lib.knnlm_interpolate(
+                logits_cat, d_cat, toks, rag.lam, rag.temperature)
+            nxt_cat = np.asarray(
+                jnp.argmax(mixed, axis=-1).astype(jnp.int32))
+            emit_cat = np.asarray(
+                jnp.concatenate([p.emitted[:, 0] for _, _, p in pts]))
+            off = 0
+            rolled: set = set()
+            for (idx, seq, p), (d, i) in zip(pts, res):
+                B = p.logits.shape[0]
+                corrected = nxt_cat[off:off + B]
+                emitted = emit_cat[off:off + B]
+                off += B
+                if id(seq) in rolled:
+                    # a later point of a sequence that already rolled
+                    # back this harvest: its query came from the
+                    # discarded timeline
+                    stats.spec_discarded += 1
+                    continue
+                stats.spec_verified += 1
+                seq.last_neighbors = (d, i)
+                if seq.request.trace is not None:
+                    # the REAL retrieval for this step — same entry the
+                    # baseline records (acceptance is token equality,
+                    # which doesn't require id equality)
+                    seq.request.trace.append(
+                        dict(step=p.step, ids=np.asarray(i)))
+                if np.array_equal(corrected, emitted):
+                    stats.spec_accepted += 1
+                else:
+                    stats.spec_rollbacks += 1
+                    rolled.add(id(seq))
+                    self._spec_rollback(seq, p, corrected, decoded, idx)
+
+    def _spec_rollback(self, seq: SequenceState, point: SpecPoint,
+                       corrected: np.ndarray,
+                       decoded: Optional[List], idx: Optional[int]) -> None:
+        """Mismatch path: rewind to the speculation point and replay
+        through the per-sequence oracle semantics with verified
+        neighbors.
+
+        The corrected token for the speculation step itself is free —
+        the verification interpolation already computed it. Later steps
+        replay as single-row waves with BLOCKING searches at due steps,
+        which is exactly the baseline's math on the corrected token
+        stream, so greedy parity holds by induction."""
+        stats = self.spec_stats
+        tr = self.tracer
+        t0 = time.perf_counter()
+        cur_step = seq.step
+        with tr.span("spec.rollback", "wave",
+                     args={"step": point.step, "depth":
+                           cur_step - point.step}
+                     if tr.enabled else None):
+            # later points' queries/logits came from the timeline being
+            # discarded — drop them unverified
+            for p in seq.spec_points:
+                cancel = getattr(p.handle, "cancel", None)
+                if cancel is not None:
+                    cancel()
+                stats.spec_discarded += 1
+            seq.spec_points.clear()
+            # token watermark: truncate to before the speculated emit
+            del seq.out[point.out_len:]
+            seq.cur = seq.out[-1][:, -1:]
+            seq.step = point.step
+            if self.pool is not None and seq.slots is not None:
+                # KV watermark. Positions written so far: the prompt
+                # (t0) plus one per decode step 1..s at t0+s-1 — plus
+                # the current wave's phase-1 decode when we are
+                # mid-wave (decoded is not None).
+                old_len = seq.t0 + cur_step - (0 if decoded is not None
+                                               else 1)
+                keep_len = seq.t0 + point.step
+                if old_len > keep_len:
+                    self.pool.rewind(seq.slots, keep_len=keep_len,
+                                     old_len=old_len)
+            # the speculation step's corrected token (no decode needed)
+            self._emit(seq, jnp.asarray(corrected, jnp.int32))
+            stats.spec_replayed_steps += 1
+            # replay the steps that decoded on the wrong token stream
+            while seq.step < cur_step:
+                logits, hidden = self.dispatch_wave([seq])[0]
+                log_or_prob = logits
+                if self._retrieval_due(seq.step):
+                    dists, ids = self.retriever.search(hidden)  # blocks
+                    seq.last_neighbors = (dists, ids)
+                    if seq.request.trace is not None:
+                        seq.request.trace.append(
+                            dict(step=seq.step, ids=np.asarray(ids)))
+                    toks = self.retriever.resolve(ids, kind="tokens")
+                    log_or_prob = rag_lib.knnlm_interpolate(
+                        logits, dists, toks, self.rag.lam,
+                        self.rag.temperature)
+                self._emit(seq, jnp.argmax(
+                    log_or_prob, axis=-1).astype(jnp.int32))
+                stats.spec_replayed_steps += 1
+            if decoded is not None and idx is not None:
+                # mid-wave: the current wave's phase-1 output for this
+                # row was computed from the wrong token — redo it so
+                # the pending finish_wave integrates corrected logits
+                decoded[idx] = self.dispatch_wave([seq])[0]
+        stats.spec_replay.add(time.perf_counter() - t0)
+
+    def spec_finalize(self, seq: SequenceState) -> None:
+        """Settle a finishing sequence's outstanding points BEFORE its
+        response is emitted: cancelled requests discard them, completed
+        ones force-verify (so the response tokens carry the parity
+        guarantee)."""
+        if not seq.spec_points:
+            return
+        if seq.request.cancelled:
+            stats = self.spec_stats
+            for p in seq.spec_points:
+                cancel = getattr(p.handle, "cancel", None)
+                if cancel is not None:
+                    cancel()
+                stats.spec_discarded += 1
+            seq.spec_points.clear()
+            return
+        self.spec_harvest([seq], decoded=None, force=True)
+
+    def flush_speculation(self) -> None:
+        """Force-verify EVERY outstanding speculation point. The
+        degrade ladder calls this before mutating retrieval quality
+        (nprobe/interval/mode): in-flight points must verify with the
+        math they were issued under, and the next due step re-seeds at
+        the new quality."""
+        if self.speculate_k <= 0:
+            return
+        seqs = [s for s in self.scheduler.active if s.spec_points]
+        if seqs:
+            self.spec_harvest(seqs, decoded=None, force=True)
 
     # -- serving API --------------------------------------------------------
 

@@ -150,10 +150,17 @@ class DegradePolicy:
                 pipe.cfg = dataclasses.replace(pipe.cfg, nprobe=nprobe)
                 if service.cache is not None:
                     # cached neighbors were computed at another quality
-                    # level; serving them would silently undo the knob
-                    service.cache = type(service.cache)(
-                        service.config.cache_entries,
-                        quant=service.config.cache_quant)
+                    # level; serving them fresh would silently undo the
+                    # knob. A generation bump (not a drop) keeps them
+                    # available as stale speculation seeds, which
+                    # verification guards anyway.
+                    mark = getattr(service, "mark_cache_stale", None)
+                    if mark is not None:
+                        mark()
+                    else:  # pragma: no cover — pre-generation caches
+                        service.cache = type(service.cache)(
+                            service.config.cache_entries,
+                            quant=service.config.cache_quant)
         elif getattr(ret, "cfg", None) is not None:
             if ret.cfg.nprobe != nprobe:
                 ret.cfg = dataclasses.replace(ret.cfg, nprobe=nprobe)
@@ -164,6 +171,18 @@ class DegradePolicy:
         # a knn rung restores the baseline mode a deeper rung turned off
         new_mode = self._base_mode if level.knn else "none"
         rag = self.engine.rag
+        changed = (rag.interval != level.interval or rag.mode != new_mode)
+        cfg = self._pipeline_cfg()
+        changed = changed or (cfg is not None and level.nprobe > 0
+                              and cfg.nprobe != level.nprobe)
+        if changed:
+            # in-flight speculation points were issued under the OLD
+            # quality: force-verify them with the math they speculated
+            # under before any knob moves (getattr: test stubs pass
+            # bare engine doubles)
+            flush = getattr(self.engine, "flush_speculation", None)
+            if flush is not None:
+                flush()
         if rag.interval != level.interval or rag.mode != new_mode:
             self.engine.rag = dataclasses.replace(
                 rag, interval=level.interval, mode=new_mode)

@@ -51,6 +51,8 @@ class PoolStats:
     seq_grows: int = 0           # sequence-axis extensions
     waves: int = 0               # decode waves dispatched
     wave_rows: int = 0           # live rows across all waves
+    rewinds: int = 0             # speculation rollbacks (slot-row groups)
+    rewound_tokens: int = 0      # KV positions logically discarded
     buckets: set = dataclasses.field(default_factory=set)  # compiled W's
     # length-aware decode attention (ragged-wave savings + jit churn)
     blocks_total: int = 0        # seq blocks a full-pool read would touch
@@ -154,6 +156,53 @@ class KVCachePool:
                                 args={"rows": len(slots),
                                       "used": self.num_used,
                                       "capacity": self.capacity})
+
+    def rewind(self, slots: np.ndarray, keep_len: int,
+               old_len: int) -> None:
+        """Logically rewind ``slots`` from ``old_len`` valid KV
+        positions back to ``keep_len`` (speculation rollback) — WITHOUT
+        touching device memory.
+
+        For full-length (linear) caches this is free by construction:
+        decode attention derives validity from the row's *position*
+        (slot index i is read iff i < kv_len and i <= pos — see
+        ``kernels.decode_attn.ref.decode_validity``), so the stale
+        suffix above ``keep_len`` is never read once the sequence's
+        position moves back, and the replayed decodes overwrite it
+        index-for-index. Ring (sliding-window) caches alias positions
+        modulo the window, so a rewind deeper than one step would leave
+        stale entries *inside* the live window where validity cannot
+        mask them — rejected here; the engine caps speculation depth at
+        1 for windowed models. Recurrent state (RWKV/SSM blocks) cannot
+        be rewound at all: the state update is not invertible and old
+        states are not retained.
+        """
+        if not (0 < keep_len <= old_len <= self.max_seq):
+            raise ValueError(
+                f"rewind wants 0 < keep_len <= old_len <= max_seq, got "
+                f"keep_len={keep_len} old_len={old_len} "
+                f"max_seq={self.max_seq}")
+        dropped = old_len - keep_len
+        if self.cfg.ssm_state > 0 or self.cfg.block in ("rwkv6", "hybrid"):
+            raise ValueError(
+                "KV rewind is undefined for recurrent-state blocks "
+                f"(block={self.cfg.block!r}, ssm_state="
+                f"{self.cfg.ssm_state}) — gate speculation off for "
+                "this model")
+        if dropped > 1 and self.cfg.window > 0 and \
+                "local" in self.cfg.pattern_classes():
+            raise ValueError(
+                f"ring (window={self.cfg.window}) caches alias positions "
+                f"modulo the window: rewinding {dropped} steps would "
+                "leave stale rows inside the live window — speculation "
+                "depth must be 1 for windowed models")
+        self.stats.rewinds += 1
+        self.stats.rewound_tokens += dropped * len(slots)
+        if self.tracer.enabled:
+            self.tracer.instant("kvpool.rewind", "kvpool",
+                                args={"rows": len(slots),
+                                      "keep_len": keep_len,
+                                      "dropped": dropped})
 
     # -- wave shape bucketing ----------------------------------------------
 

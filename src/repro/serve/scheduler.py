@@ -201,6 +201,13 @@ class RalmScheduler:
                      args={"active": len(self.active)}
                      if tr.enabled else None):
             decoded = self.engine.dispatch_wave(self.active)
+            if self.engine.speculate_k > 0:
+                # speculation harvest: verify points whose real search
+                # has had its waves to land — AFTER the next decode is
+                # dispatched (the overlap that hides the scan) and
+                # BEFORE the search phase (so an accepted point's real
+                # neighbors seed this wave's speculations)
+                self.engine.spec_harvest(self.active, decoded)
             with tr.span("wave.search", "wave"):
                 searches = self.engine.dispatch_search_wave(
                     self.active, decoded)
@@ -211,6 +218,11 @@ class RalmScheduler:
         still_active = []
         for seq in self.active:
             if seq.done:
+                if seq.spec_points:
+                    # settle outstanding speculation before the response
+                    # leaves the system (forced verify; discard when
+                    # cancelled) — the parity guarantee is per-response
+                    self.engine.spec_finalize(seq)
                 self.engine.release(seq)   # slots free for queued work
                 finished.append(self._response(seq))
             else:

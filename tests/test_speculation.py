@@ -1,0 +1,476 @@
+"""Speculative retrieval (RaLMSpec, arXiv 2401.14021): decode ahead on
+stale neighbors, verify against the landed search, roll back on
+mismatch.
+
+The load-bearing claim is GREEDY PARITY: with verification on, a
+speculating engine must emit token-identical sequences to the same
+engine with speculation off, for every (interval, depth, admission
+stagger, lam) — acceptance merely decides how much latency gets hidden,
+never what gets emitted. The bigram corpus here is deliberately
+speculation-hostile (consecutive queries retrieve different payload
+tokens, so almost every point rolls back), which makes it the strongest
+parity fixture: the rollback/replay path runs constantly and must still
+reproduce the baseline stream.
+
+Also covered: the KV-pool rewind contract (bookkeeping-only rollback +
+replay == fresh decode; hard rejections for recurrent and deep-ring
+rewinds), the stale-tolerant partial-hit query cache, the service-level
+partial-batch stitch, degrade-ladder speculation flush, and the
+``speculation`` stats plane.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import get_arch
+from repro.models import transformer as tf
+from repro.retrieval import QueryCache, RetrievalService, ServiceConfig
+from repro.serve import (DatastoreBuilder, RagConfig, RalmEngine,
+                         RalmRequest)
+from repro.serve.gateway import DegradePolicy
+
+
+@pytest.fixture(scope="module")
+def tiny_ralm():
+    """Tiny decoder LM + datastore over a deterministic-bigram corpus
+    (token t -> (3t+1) mod 64) — same fixture family as
+    tests/test_serve.py."""
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, 64, size=(64,))
+    corpus = [start]
+    for _ in range(31):
+        corpus.append((3 * corpus[-1] + 1) % 64)
+    corpus = np.stack(corpus, axis=1).astype(np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8,
+                          list_cap=512).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+    rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999,
+                    temperature=1.0)
+    return cfg, params, corpus, ds, ccfg, rag
+
+
+def _build(tiny, spec_k, *, lam=None, interval=None, verify=True,
+           cache=0):
+    cfg, params, _, ds, ccfg, rag = tiny
+    if lam is not None:
+        rag = dataclasses.replace(rag, lam=lam)
+    if interval is not None:
+        rag = dataclasses.replace(rag, interval=interval)
+    ret = ds.async_retriever(ccfg, service_cfg=ServiceConfig(
+        measure=False, cache_entries=cache))
+    return RalmEngine.monolithic(params, cfg, rag, retriever=ret,
+                                 speculate_k=spec_k,
+                                 speculate_verify=verify)
+
+
+def _run(eng, prompts, steps=8, stagger=0):
+    """Submit ``prompts`` (the first immediately, the rest after
+    ``stagger`` scheduler steps — staggered admission means waves mix
+    sequences at different depths) and return tokens per request in
+    submission order."""
+    done = []
+    rids = [eng.submit(RalmRequest(prompt=prompts[0], steps=steps))]
+    for _ in range(stagger):
+        done += eng.step()
+    rids += [eng.submit(RalmRequest(prompt=p, steps=steps))
+             for p in prompts[1:]]
+    done += eng.run()
+    by_id = {r.request_id: np.asarray(r.tokens) for r in done}
+    return [by_id[r] for r in rids]
+
+
+def _prompts(corpus, n=2):
+    return [jnp.asarray(corpus[2 * i:2 * i + 2, :4]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: speculation + verification == speculation off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [1, 2])
+def test_greedy_parity(tiny_ralm, spec_k):
+    prompts = _prompts(tiny_ralm[2])
+    base = _run(_build(tiny_ralm, 0), prompts)
+    eng = _build(tiny_ralm, spec_k)
+    spec = _run(eng, prompts)
+    for a, b in zip(base, spec):
+        np.testing.assert_array_equal(a, b)
+    st_ = eng.spec_stats
+    assert st_.spec_issued > 0 and st_.spec_verified > 0
+    assert st_.spec_accepted + st_.spec_rollbacks == st_.spec_verified
+
+
+def test_greedy_parity_lm_dominant_mix(tiny_ralm):
+    """Low lam: the LM logits dominate the mix, so accept/reject flips
+    on small distance changes — parity must survive the rollbacks."""
+    prompts = _prompts(tiny_ralm[2])
+    base = _run(_build(tiny_ralm, 0, lam=0.25), prompts)
+    eng = _build(tiny_ralm, 1, lam=0.25)
+    spec = _run(eng, prompts)
+    for a, b in zip(base, spec):
+        np.testing.assert_array_equal(a, b)
+    assert eng.spec_stats.spec_verified > 0
+
+
+@pytest.mark.parametrize("interval,spec_k,stagger", [
+    (1, 1, 2),     # every step due, waves at mixed depths
+    (2, 2, 1),     # sparse retrieval, deeper outstanding window
+    (3, 1, 0),     # interval coprime with the wave count
+])
+def test_greedy_parity_staggered(tiny_ralm, interval, spec_k, stagger):
+    prompts = _prompts(tiny_ralm[2])
+    base = _run(_build(tiny_ralm, 0, interval=interval), prompts,
+                steps=9, stagger=stagger)
+    eng = _build(tiny_ralm, spec_k, interval=interval)
+    spec = _run(eng, prompts, steps=9, stagger=stagger)
+    for a, b in zip(base, spec):
+        np.testing.assert_array_equal(a, b)
+
+
+_BASELINES = {}
+
+
+@given(st.integers(1, 3), st.integers(1, 2), st.integers(0, 2),
+       st.sampled_from([0.999, 0.5]))
+def test_greedy_parity_random(tiny_ralm, interval, spec_k, stagger, lam):
+    """Property form of the parity claim over random (interval, depth,
+    stagger, lam) corners. Baselines are memoized per corner — the
+    speculating engine is the subject under test."""
+    key = (interval, stagger, lam)
+    if key not in _BASELINES:
+        _BASELINES[key] = _run(
+            _build(tiny_ralm, 0, lam=lam, interval=interval),
+            _prompts(tiny_ralm[2]), steps=7, stagger=stagger)
+    eng = _build(tiny_ralm, spec_k, lam=lam, interval=interval)
+    spec = _run(eng, _prompts(tiny_ralm[2]), steps=7, stagger=stagger)
+    for a, b in zip(_BASELINES[key], spec):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# forced mismatch: rollback replay == the per-sequence oracle
+# ---------------------------------------------------------------------------
+
+def test_forced_mismatch_rollback_matches_oracle(tiny_ralm):
+    """Poison every speculation seed with garbage neighbors (dists 0,
+    ids 0 — a constant wrong payload token) so verification must reject
+    and roll back, then check the emitted stream still equals the
+    per-sequence oracle engine (wave=False, blocking searches)."""
+    cfg, params, corpus, ds, ccfg, rag = tiny_ralm
+    prompt = jnp.asarray(corpus[0:2, :4])
+
+    oracle_eng = RalmEngine.monolithic(params, cfg, rag,
+                                       retriever=ds.retriever(ccfg),
+                                       wave=False)
+    oracle = np.asarray(oracle_eng.generate(prompt, steps=8))
+
+    eng = _build(tiny_ralm, 1)
+    eng.submit(RalmRequest(prompt=prompt, steps=8))
+    done = []
+    while eng.scheduler.has_work:
+        done += eng.step()
+        for seq in eng.scheduler.active:
+            if seq.last_neighbors is not None:
+                d, i = seq.last_neighbors
+                seq.last_neighbors = (jnp.zeros_like(d),
+                                      jnp.zeros_like(i))
+    np.testing.assert_array_equal(oracle, np.asarray(done[0].tokens))
+    st_ = eng.spec_stats
+    assert st_.spec_rollbacks >= 1
+    assert st_.spec_replayed_steps >= 0   # depth-1 replays can be empty
+    assert st_.spec_replay.count == st_.spec_rollbacks
+
+
+def test_no_verify_adopts_stale_neighbors(tiny_ralm):
+    """verify=False trusts the speculated tokens outright: no
+    rollbacks ever, and on this corpus (stale != real almost always)
+    the stream is allowed to drift from baseline."""
+    eng = _build(tiny_ralm, 1, verify=False)
+    _run(eng, _prompts(tiny_ralm[2]))
+    st_ = eng.spec_stats
+    assert st_.spec_issued > 0
+    assert st_.spec_rollbacks == 0 and st_.spec_verified == 0
+
+
+# ---------------------------------------------------------------------------
+# eligibility gates
+# ---------------------------------------------------------------------------
+
+def test_speculation_requires_wave_decode(tiny_ralm):
+    cfg, params, _, ds, ccfg, rag = tiny_ralm
+    ret = ds.async_retriever(ccfg,
+                             service_cfg=ServiceConfig(measure=False))
+    with pytest.warns(RuntimeWarning, match="wave"):
+        eng = RalmEngine.monolithic(params, cfg, rag, retriever=ret,
+                                    wave=False, speculate_k=1)
+    assert eng.speculate_k == 0
+
+
+def test_sampled_requests_never_speculate(tiny_ralm):
+    """Sampling consumes rng state a rollback cannot restore — the
+    per-row gate must keep sampled requests on the blocking path."""
+    _, _, corpus, _, _, _ = tiny_ralm
+    eng = _build(tiny_ralm, 1)
+    eng.submit(RalmRequest(prompt=jnp.asarray(corpus[0:2, :4]), steps=6,
+                           greedy=False, rng=jax.random.PRNGKey(7)))
+    eng.run()
+    assert eng.spec_stats.spec_issued == 0
+
+
+# ---------------------------------------------------------------------------
+# KV-pool rewind
+# ---------------------------------------------------------------------------
+
+def _force(eng, seq, toks):
+    """Teacher-forced wave decode: consume ``seq.cur``, record the
+    logits, emit the forced token. Returns host logits per step."""
+    outs = []
+    for t in toks:
+        logits, _ = eng.dispatch_wave([seq])[0]
+        outs.append(np.asarray(logits))
+        eng._emit(seq, jnp.full((seq.cur.shape[0],), t, jnp.int32))
+    return outs
+
+
+def test_kvpool_rewind_replay_matches_fresh_decode(tiny_ralm):
+    """Rewind is bookkeeping-only for linear caches: after rewinding a
+    3-step speculation and replaying a DIFFERENT continuation, the
+    logits must match a fresh sequence that decoded that continuation
+    from scratch."""
+    cfg, params, corpus, _, _, _ = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, RagConfig(mode="none"))
+    prompt = jnp.asarray(corpus[0:2, :4])
+
+    seq = eng.start(RalmRequest(prompt=prompt, steps=8))
+    _force(eng, seq, [7, 11, 13, 17])       # step 0 + speculated 1..3
+    assert seq.step == 4
+    t0 = seq.t0
+    eng.pool.rewind(seq.slots, keep_len=t0 + 1, old_len=t0 + 3)
+    seq.step = 2                             # roll back to after token 7
+    seq.cur = jnp.full((2, 1), 21, jnp.int32)
+    replayed = _force(eng, seq, [23, 29])
+
+    fresh = eng.start(RalmRequest(prompt=prompt, steps=8))
+    ref = _force(eng, fresh, [7, 21, 23, 29])
+    assert np.allclose(replayed[0], ref[2]) and \
+        np.allclose(replayed[1], ref[3])
+    ps = eng.pool.stats
+    assert ps.rewinds == 1 and ps.rewound_tokens == 2 * 2
+
+
+def test_kvpool_rewind_rejections(tiny_ralm):
+    cfg, params, corpus, _, _, _ = tiny_ralm
+    eng = RalmEngine.monolithic(params, cfg, RagConfig(mode="none"))
+    seq = eng.start(RalmRequest(prompt=jnp.asarray(corpus[0:2, :4]),
+                                steps=4))
+    pool = eng.pool
+    with pytest.raises(ValueError, match="keep_len"):
+        pool.rewind(seq.slots, keep_len=0, old_len=4)
+    with pytest.raises(ValueError, match="keep_len"):
+        pool.rewind(seq.slots, keep_len=6, old_len=4)
+    with pytest.raises(ValueError, match="keep_len"):
+        pool.rewind(seq.slots, keep_len=4, old_len=pool.max_seq + 1)
+    # recurrent state cannot be rewound at all
+    pool.cfg = dataclasses.replace(cfg, ssm_state=16)
+    with pytest.raises(ValueError, match="recurrent"):
+        pool.rewind(seq.slots, keep_len=4, old_len=5)
+    # ring caches alias mod the window: depth 1 ok, deeper rejected
+    pool.cfg = dataclasses.replace(cfg, window=4,
+                                   layer_pattern=("local",))
+    pool.rewind(seq.slots, keep_len=4, old_len=5)
+    with pytest.raises(ValueError, match="window"):
+        pool.rewind(seq.slots, keep_len=4, old_len=6)
+
+
+def test_engine_caps_depth_for_windowed_models(tiny_ralm):
+    cfg, params, _, ds, ccfg, rag = tiny_ralm
+    wcfg = dataclasses.replace(cfg, window=8, layer_pattern=("local",))
+    wparams = tf.init_params(jax.random.PRNGKey(0), wcfg)
+    ret = ds.async_retriever(ccfg,
+                             service_cfg=ServiceConfig(measure=False))
+    eng = RalmEngine.monolithic(wparams, wcfg, rag, retriever=ret,
+                                speculate_k=3)
+    assert eng.speculate_k == 3 and eng._spec_depth == 1
+
+
+# ---------------------------------------------------------------------------
+# stale-tolerant query cache
+# ---------------------------------------------------------------------------
+
+def _cache_rows(n, dim=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, dim)).astype(
+        np.float32)
+
+
+def test_query_cache_partial_hits():
+    cache = QueryCache(capacity=8, partial=True)
+    q = _cache_rows(4)
+    assert cache.get_batch(q) is None              # cold: zero hits
+    cache.put_batch(q[:2], np.ones((2, 3)), np.arange(6).reshape(2, 3))
+    dists, ids, hit = cache.get_batch(q)
+    assert hit.tolist() == [True, True, False, False]
+    assert (ids[~hit] == -1).all() and (dists[~hit] == 0).all()
+    assert (ids[0] == [0, 1, 2]).all()
+    assert cache.hits == 2 and cache.misses == 6   # 4 cold + 2 now
+
+
+def test_query_cache_legacy_all_or_nothing():
+    cache = QueryCache(capacity=8)                 # partial=False default
+    q = _cache_rows(3)
+    cache.put_batch(q[:2], np.zeros((2, 3)), np.zeros((2, 3), np.int32))
+    assert cache.get_batch(q) is None              # one row missing -> miss
+    assert cache.misses == 3 and cache.hits == 0
+    out = cache.get_batch(q[:2])
+    assert out is not None and cache.hits == 2
+
+
+def test_query_cache_generations_and_stale_serving():
+    cache = QueryCache(capacity=8, partial=True)
+    q = _cache_rows(2)
+    cache.put_batch(q, np.ones((2, 3)), np.zeros((2, 3), np.int32))
+    cache.mark_stale()
+    assert cache.get_batch(q) is None              # fresh lookup: stale
+    assert cache.stale == 2 and cache.misses == 2
+    assert cache.contains(q[0], any_generation=True)
+    assert not cache.contains(q[0])
+    stale = cache.get_stale(q)                     # speculation seed path
+    assert stale is not None and cache.stale_served == 2
+    assert cache.get_stale(_cache_rows(2, seed=9)) is None
+    cache.put_batch(q, np.ones((2, 3)), np.zeros((2, 3), np.int32))
+    assert cache.get_batch(q) is not None          # re-put at current gen
+
+
+# ---------------------------------------------------------------------------
+# service: partial-batch stitch + stale lookup
+# ---------------------------------------------------------------------------
+
+def test_service_partial_batch_stitch(tiny_ralm):
+    """A batch that half-hits the cache sends ONLY the missed rows to
+    the kernel; the stitched result must equal the cacheless search."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    rng = np.random.default_rng(3)
+    qa = jnp.asarray(rng.normal(size=(4, ds.index_cfg.dim)).astype(np.float32))
+    qb_new = jnp.asarray(rng.normal(size=(2, ds.index_cfg.dim)).astype(np.float32))
+    qb = jnp.concatenate([qa[0:1], qb_new[0:1], qa[2:3], qb_new[1:2]])
+
+    svc = RetrievalService.local(ds.params, ds.shards, ccfg,
+                                 ServiceConfig(cache_entries=32,
+                                               measure=False))
+    assert svc.config.cache_partial and svc.cache.partial
+    h = svc.submit(qa)
+    svc.flush()
+    h.result()
+    disp0 = svc.stats.scan_dispatches
+    h2 = svc.submit(qb)
+    svc.flush()
+    dists, ids = h2.result()
+    assert svc.stats.scan_dispatches == disp0 + 1
+    assert svc.stats.cache_hits == 2
+
+    bare = RetrievalService.local(ds.params, ds.shards, ccfg,
+                                  ServiceConfig(cache_entries=0,
+                                                measure=False))
+    hb = bare.submit(qb)
+    bare.flush()
+    bd, bi = hb.result()
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(bi))
+    np.testing.assert_allclose(np.asarray(dists), np.asarray(bd),
+                               rtol=1e-5)
+
+
+def test_service_stale_lookup(tiny_ralm):
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    q = jnp.asarray(np.random.default_rng(4).normal(
+        size=(2, ds.index_cfg.dim)).astype(np.float32))
+    svc = RetrievalService.local(ds.params, ds.shards, ccfg,
+                                 ServiceConfig(cache_entries=32,
+                                               measure=False))
+    assert svc.stale_lookup(q) is None             # cold
+    h = svc.submit(q)
+    svc.flush()
+    d0, i0 = h.result()
+    svc.mark_cache_stale()
+    hits0 = svc.stats.cache_hits
+    got = svc.stale_lookup(q)                      # serves any generation
+    assert got is not None
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(i0))
+    assert svc.stats.cache_hits == hits0           # not a demand hit
+
+
+# ---------------------------------------------------------------------------
+# degrade ladder: quality knobs flush in-flight speculation
+# ---------------------------------------------------------------------------
+
+def test_degrade_flushes_speculation_and_keeps_cache(tiny_ralm):
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    svc = RetrievalService.local(ds.params, ds.shards, ccfg,
+                                 ServiceConfig(cache_entries=32,
+                                               measure=False))
+    q = jnp.asarray(np.random.default_rng(5).normal(
+        size=(2, ds.index_cfg.dim)).astype(np.float32))
+    h = svc.submit(q)
+    svc.flush()
+    h.result()
+
+    eng = types.SimpleNamespace(
+        rag=RagConfig(mode="knnlm", interval=1, k=8),
+        retriever=types.SimpleNamespace(service=svc),
+        flushed=0)
+    eng.flush_speculation = lambda: setattr(eng, "flushed",
+                                            eng.flushed + 1)
+    pol = DegradePolicy(eng)
+    cache = svc.cache
+    gen0 = cache.generation
+    pol.apply(1)                                   # nprobe/2 rung
+    assert eng.flushed == 1
+    assert svc.pipeline.cfg.nprobe == ccfg.nprobe // 2
+    assert svc.cache is cache                      # kept, not dropped
+    assert cache.generation == gen0 + 1            # but marked stale
+    assert cache.get_stale(np.asarray(q)) is not None
+    pol.apply(1)                                   # idempotent: no re-flush
+    assert eng.flushed == 1
+
+
+# ---------------------------------------------------------------------------
+# stats plane
+# ---------------------------------------------------------------------------
+
+def test_spec_stats_snapshot_and_rates():
+    from repro.retrieval.stats import RetrievalStats
+    stats = RetrievalStats()
+    snap = stats.snapshot()
+    spec = snap["speculation"]
+    for key in ("issued", "verified", "accepted", "rollbacks",
+                "discarded", "replayed_steps", "acceptance_rate",
+                "rollback_rate", "spec_wait", "spec_replay"):
+        assert key in spec
+    assert snap["cache_stale"] == 0
+    stats.spec_verified = 4
+    stats.spec_accepted = 3
+    stats.spec_rollbacks = 1
+    assert stats.spec_acceptance_rate() == pytest.approx(0.75)
+    assert stats.spec_rollback_rate() == pytest.approx(0.25)
+
+
+def test_spec_metrics_families(tiny_ralm):
+    """bind_engine_metrics exports the ralm_spec_* families after a
+    speculating run."""
+    from repro.obs import MetricsRegistry, bind_engine_metrics
+    eng = _build(tiny_ralm, 1)
+    _run(eng, _prompts(tiny_ralm[2]), steps=6)
+    reg = MetricsRegistry()
+    bind_engine_metrics(reg, eng)
+    text = reg.render()
+    assert "ralm_spec_issued_total" in text
+    assert 'ralm_spec_verified_total{outcome="accepted"}' in text
+    assert 'ralm_spec_verified_total{outcome="rollback"}' in text
+    assert "ralm_spec_landed_total" in text
+    assert "ralm_spec_acceptance_rate" in text
+    assert 'ralm_retrieval_cache_total{result="stale"}' in text
