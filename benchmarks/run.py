@@ -27,6 +27,13 @@ run-structured corpus and merges a ``speculation`` section — acceptance
 rate, rollback counts, net hidden fraction of the per-step retrieval
 block — into ``BENCH_serve.json`` (see benchmarks/speculation_bench.py).
 
+``--mode chaos`` serves request streams against seeded fault plans
+(replica crash / hang / slowdown / whole-shard outage at the retrieval
+scan boundary) and merges a ``chaos`` section — availability, settled
+p99 TTFT vs the fault-free baseline, partial-result accounting,
+ejection/recovery counts, plus the FT-armed-but-fault-free inertness
+parity — into ``BENCH_serve.json`` (see benchmarks/chaos_bench.py).
+
 ``--mode traffic`` drives the HTTP serving gateway with a closed-loop
 capacity calibration plus an open-loop Poisson sweep (heavy-tailed
 lengths, multi-tenant, up to 2x overload) and merges a ``traffic``
@@ -45,7 +52,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["figures", "retrieval", "serve", "kernels",
-                             "decode-attn", "traffic", "speculation"],
+                             "decode-attn", "traffic", "speculation",
+                             "chaos"],
                     default="figures")
     ap.add_argument("--out", default=None,
                     help="output path for the sweep modes")
@@ -74,6 +82,11 @@ def main() -> None:
     if args.mode == "speculation":
         from benchmarks import speculation_bench
         speculation_bench.main(args.out or "BENCH_serve.json")
+        return
+
+    if args.mode == "chaos":
+        from benchmarks import chaos_bench
+        chaos_bench.main(args.out or "BENCH_serve.json")
         return
 
     if args.mode == "traffic":

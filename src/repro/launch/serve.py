@@ -57,6 +57,25 @@ def main() -> None:
                     help="skip verify-and-rollback: trust stale "
                          "neighbors outright (bounded quality drift, "
                          "zero rollback cost)")
+    ap.add_argument("--retrieval-deadline-ms", type=float, default=0.0,
+                    help="per-dispatch retrieval latency budget in ms: a "
+                         "fault domain still unresolved past it is dropped "
+                         "and the flush serves exact top-k over the "
+                         "survivors (0 = wait indefinitely). Arms the "
+                         "fault-tolerant dispatch layer; requires "
+                         "--async-retrieval")
+    ap.add_argument("--hedge-quantile", type=float, default=0.95,
+                    help="latency quantile after which a hung retrieval "
+                         "dispatch is hedged to another replica")
+    ap.add_argument("--shard-replicas", type=int, default=1,
+                    help="dispatch-target replicas per retrieval fault "
+                         "domain (>1 arms replica failover; requires "
+                         "--async-retrieval)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN.json",
+                    help="arm a deterministic FaultPlan (JSON) at the "
+                         "retrieval scan boundary: injected hangs / "
+                         "crashes / errors / slowdowns exercise failover, "
+                         "hedging, and partial results (docs/retrieval.md)")
     ap.add_argument("--no-retrieval-measure", action="store_true",
                     help="drop the per-flush stage-timing host blocks "
                          "(maximum decode/search overlap; the stats line "
@@ -141,6 +160,11 @@ def main() -> None:
                            attn_interpret=(False if args.no_interpret
                                            else None),
                            attn_seq_block=args.attn_seq_block,
+                           retrieval_deadline_s=(
+                               args.retrieval_deadline_ms / 1e3),
+                           hedge_quantile=args.hedge_quantile,
+                           shard_replicas=args.shard_replicas,
+                           chaos_plan=args.chaos,
                            trace=args.trace is not None,
                            trace_path=args.trace)
     engine = RalmEngine.from_config(econfig, params, ds, ccfg)
@@ -198,6 +222,15 @@ def main() -> None:
                      f"scan {st.scan.mean_s * 1e6:.0f}us "
                      f"merge {st.merge.mean_s * 1e6:.0f}us")
         print(line)
+        if service.replicas is not None:
+            states = service.replicas.state_counts()
+            print(f"[serve] fault tolerance: {st.ft_timeouts} timeouts, "
+                  f"{st.ft_hedges} hedges, {st.ft_retries} retries, "
+                  f"{st.ft_crashes} crashes -> {st.ft_ejections} "
+                  f"ejections / {st.ft_recoveries} recoveries; "
+                  f"{st.ft_partial_flushes} partial flushes "
+                  f"({st.ft_partial_rows} rows); replicas "
+                  + " ".join(f"{k}={v}" for k, v in states.items() if v))
         if st.spec_issued:
             print(f"[serve] speculation: {st.spec_issued} issued, "
                   f"{st.spec_accepted}/{st.spec_verified} accepted "

@@ -89,6 +89,21 @@ def bind_engine_metrics(registry: MetricsRegistry, engine) -> None:
         "ralm_spec_stage_seconds",
         "speculation stage latency summary (spec_wait = residual "
         "retrieval block, spec_replay = rollback cost), seconds")
+    fault_total = registry.counter(
+        "ralm_retrieval_fault_total",
+        "fault-tolerant dispatch events by kind (timeout/hedge/retry/"
+        "crash/ejection/recovery/partial_flush/partial_row/spec_flushed)")
+    fault_dispatch = registry.gauge(
+        "ralm_retrieval_fault_dispatch_seconds",
+        "fault-tolerant dispatch loop wall time per flush "
+        "(scan + failover + hedging), summary stats in seconds")
+    fault_replicas = registry.gauge(
+        "ralm_retrieval_fault_replicas",
+        "retrieval dispatch replicas by health state")
+    straggler_waves = registry.counter(
+        "ralm_wave_straggler_total",
+        "decode waves flagged as stragglers (>threshold x rolling "
+        "median wave time)")
 
     def collect() -> None:
         pool = engine.pool
@@ -143,6 +158,28 @@ def bind_engine_metrics(registry: MetricsRegistry, engine) -> None:
                                labels={"stage": stage, "stat": "mean"})
                 spec_stage.set(stat.p99_s(),
                                labels={"stage": stage, "stat": "p99"})
+            for kind, val in (("timeout", st.ft_timeouts),
+                              ("hedge", st.ft_hedges),
+                              ("retry", st.ft_retries),
+                              ("crash", st.ft_crashes),
+                              ("ejection", st.ft_ejections),
+                              ("recovery", st.ft_recoveries),
+                              ("partial_flush", st.ft_partial_flushes),
+                              ("partial_row", st.ft_partial_rows),
+                              ("spec_flushed", st.ft_spec_flushed)):
+                fault_total.set_total(val, labels={"kind": kind})
+            fault_dispatch.set(st.ft_dispatch.mean_s,
+                               labels={"stat": "mean"})
+            fault_dispatch.set(st.ft_dispatch.p99_s(),
+                               labels={"stat": "p99"})
+            replicas = getattr(service, "replicas", None)
+            if replicas is not None:
+                for state, n in replicas.state_counts().items():
+                    fault_replicas.set(n, labels={"state": state})
+        scheduler = getattr(engine, "scheduler", None)
+        if scheduler is not None:
+            straggler_waves.set_total(
+                getattr(scheduler, "straggler_events", 0))
 
     registry.register_collector(collect)
 

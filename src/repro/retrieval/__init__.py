@@ -9,14 +9,23 @@ The pieces, bottom-up:
   * ``router``  — shard placement + query broadcast / payload gather
     over the retrieval mesh (``ShardRouter``);
   * ``stats``   — per-stage latency / QPS / coalescing accounting;
+  * ``replica`` — per-shard replica groups + the health state machine
+    behind fault-tolerant dispatch (failover, hedging, ejection);
+  * ``chaos``   — deterministic fault injection (``FaultPlan``) at the
+    pipeline scan boundary;
   * ``service`` — ``RetrievalService``: in-flight request table,
-    deadline-based micro-batching, ``SearchHandle`` futures.
+    deadline-based micro-batching, ``SearchHandle`` futures,
+    fault-tolerant dispatch with partial-result degradation.
 
 ``repro.serve`` plugs this in through ``AsyncRetriever``; the legacy
 ``core.chamvs.search_single`` is a one-shot call into the same service.
 """
 from repro.retrieval.cache import QueryCache
-from repro.retrieval.merge import flat_merge, hierarchical_merge, merge_topk
+from repro.retrieval.chaos import (ChaosInjector, FaultPlan, FaultSpec,
+                                   ScanHang, crash_plan)
+from repro.retrieval.merge import (flat_merge, hierarchical_merge,
+                                   mask_producers, merge_topk)
+from repro.retrieval.replica import FailoverConfig, ReplicaGroup
 from repro.retrieval.router import ShardRouter, build_gather, build_search
 from repro.retrieval.service import (LocalPipeline, RetrievalService,
                                      RouterPipeline, SearchHandle,
@@ -24,8 +33,10 @@ from repro.retrieval.service import (LocalPipeline, RetrievalService,
 from repro.retrieval.stats import RetrievalStats, StageStat
 
 __all__ = [
-    "LocalPipeline", "QueryCache", "RetrievalService", "RetrievalStats",
-    "RouterPipeline", "SearchHandle", "ServiceConfig", "ShardRouter",
-    "StageStat", "build_gather", "build_search", "flat_merge",
-    "hierarchical_merge", "merge_topk",
+    "ChaosInjector", "FailoverConfig", "FaultPlan", "FaultSpec",
+    "LocalPipeline", "QueryCache", "ReplicaGroup", "RetrievalService",
+    "RetrievalStats", "RouterPipeline", "ScanHang", "SearchHandle",
+    "ServiceConfig", "ShardRouter", "StageStat", "build_gather",
+    "build_search", "crash_plan", "flat_merge", "hierarchical_merge",
+    "mask_producers", "merge_topk",
 ]

@@ -100,3 +100,18 @@ def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
     if fanout is None or dists.shape[0] <= 1:
         return flat_merge(dists, ids, k)
     return hierarchical_merge(dists, ids, k, fanout=fanout)
+
+
+def mask_producers(dists: jnp.ndarray, ids: jnp.ndarray,
+                   live: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask dead producers' candidate lists to the padding sentinel
+    before a merge: ``live`` is a [S] bool over the producer axis, and
+    a False row becomes ``(+inf, -1)`` — the same convention padded
+    candidates already use, so the downstream K-selection is *exactly*
+    the global top-k over the union of the surviving producers'
+    candidates. This is how a partial-result flush stays an exact
+    search over the live subset rather than an approximation."""
+    mask = live.reshape((-1,) + (1,) * (dists.ndim - 1))
+    return (jnp.where(mask, dists, jnp.inf),
+            jnp.where(mask, ids, -1))

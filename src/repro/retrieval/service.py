@@ -43,6 +43,9 @@ from repro.kernels.chamvs_scan.ops import fused_shard_scan
 from repro.kernels.ivf_scan.ops import ivf_index_scan
 from repro.retrieval import merge as merge_lib
 from repro.retrieval.cache import QueryCache
+from repro.retrieval.chaos import ChaosInjector, FaultPlan, ScanHang
+from repro.retrieval.replica import (EJECTED, HEALTHY, PROBATION,
+                                     FailoverConfig, ReplicaGroup)
 from repro.retrieval.stats import RetrievalStats
 
 
@@ -81,6 +84,15 @@ class ServiceConfig:
     #                               one fused chamvs_scan dispatch per
     #                               wave (True) vs the staged per-shard
     #                               pipeline (False, the parity oracle)
+    failover: Optional[FailoverConfig] = None  # fault-tolerant dispatch:
+    #                               replica groups + per-dispatch
+    #                               deadlines + hedged re-dispatch +
+    #                               partial results (repro.retrieval.
+    #                               replica). None = the legacy direct
+    #                               dispatch, bit-identical to before.
+    #                               NOTE: deadline enforcement needs the
+    #                               scan's real latency, so the FT layer
+    #                               blocks per flush like measure=True
 
 
 def next_pow2(n: int) -> int:
@@ -181,6 +193,12 @@ class LocalPipeline:
         path regardless of shard count, one per shard when staged."""
         return 1 if self.cfg.fused else max(1, len(self.shards))
 
+    @property
+    def fault_domains(self) -> int:
+        """Independent failure domains of this pipeline: each shard can
+        fail on its own (candidates stay per-shard until the merge)."""
+        return max(1, len(self.shards))
+
     def scan(self, queries: jnp.ndarray):
         if self.cfg.fused:
             return _scan_stage_fused(self.params, self.stacked, queries,
@@ -200,6 +218,10 @@ class RouterPipeline:
     ``ServiceConfig.merge_fanout`` does not apply)."""
 
     scan_dispatches = 1   # the whole in-graph search is one dispatch
+    fault_domains = 1     # the in-graph search merges in-network, so
+    #                       the whole mesh fails (or answers) as one
+    #                       domain — partial results degrade to
+    #                       total loss here
 
     def __init__(self, router, params: IVFPQParams,
                  shards: List[IVFPQShard]):
@@ -240,6 +262,13 @@ class _InFlight:
     #                                          (dists, ids, hit mask) of
     #                                          the cached rows to merge
     #                                          with the kernel rows
+    partial: bool = False                    # served from a live subset
+    #                                          of the fault domains (a
+    #                                          shard was down past the
+    #                                          deadline): exact top-k
+    #                                          over the survivors only
+    live_frac: float = 1.0                   # fraction of fault domains
+    #                                          that contributed
 
 
 class SearchHandle:
@@ -256,6 +285,18 @@ class SearchHandle:
     @property
     def ticket(self) -> int:
         return self._entry.ticket
+
+    @property
+    def partial(self) -> bool:
+        """True when the result covers only the surviving fault domains
+        (exact top-k over the live subset — see ``_dispatch_scan``).
+        Meaningful once ``done()``; consumers use it to count quality
+        impact and to skip seeding speculation with degraded results."""
+        return self._entry.partial
+
+    @property
+    def live_fraction(self) -> float:
+        return self._entry.live_frac
 
     def done(self) -> bool:
         return self._entry.result_d is not None
@@ -292,6 +333,60 @@ class RetrievalService:
         self._pending: List[Tuple[_InFlight, jnp.ndarray]] = []
         self._pending_rows = 0
         self._next_ticket = 0
+        # -- fault tolerance (replica failover / deadlines / chaos) ----
+        self.replicas: Optional[ReplicaGroup] = None
+        self.chaos: Optional[ChaosInjector] = None
+        self._degraded_partial = False    # degrade-ladder rung: serve
+        #                                   the live subset immediately,
+        #                                   no hedging or retries
+        if self.config.failover is not None:
+            self.replicas = ReplicaGroup(
+                getattr(pipeline, "fault_domains", 1),
+                self.config.failover,
+                on_transition=self._on_replica_transition)
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def _on_replica_transition(self, shard: int, replica: int,
+                               old: str, new: str) -> None:
+        if new == EJECTED:
+            self.stats.ft_ejections += 1
+            if self.tracer.enabled:
+                self.tracer.instant("retrieval.eject", "retrieval",
+                                    args={"shard": shard,
+                                          "replica": replica, "from": old})
+        elif old == PROBATION and new == HEALTHY:
+            self.stats.ft_recoveries += 1
+            if self.tracer.enabled:
+                self.tracer.instant("retrieval.recover", "retrieval",
+                                    args={"shard": shard,
+                                          "replica": replica})
+
+    def install_chaos(self, plan) -> ChaosInjector:
+        """Arm a ``FaultPlan`` (or a path to its JSON) at this service's
+        scan boundary. Chaos requires the fault-tolerant dispatch loop,
+        so a replica group is created on demand (single-replica: every
+        fault beyond retries degrades to partial results)."""
+        if isinstance(plan, str):
+            plan = FaultPlan.load(plan)
+        if isinstance(plan, FaultPlan):
+            injector = ChaosInjector(plan)
+        else:
+            injector = plan
+        if self.replicas is None:
+            self.replicas = ReplicaGroup(
+                getattr(self.pipeline, "fault_domains", 1),
+                FailoverConfig(replicas=1),
+                on_transition=self._on_replica_transition)
+        self.chaos = injector
+        return injector
+
+    def set_degraded_partial(self, flag: bool) -> None:
+        """Degrade-ladder hook ("partial-retrieval" rung): when set, the
+        dispatch loop gives every domain ONE attempt and serves whatever
+        subset answered — shedding hedges, retries, and tail waits. A
+        no-op unless the fault-tolerant layer is active."""
+        self._degraded_partial = bool(flag)
 
     # -- constructors -------------------------------------------------------
 
@@ -421,6 +516,144 @@ class RetrievalService:
             b += mult - b % mult
         return b
 
+    def _dispatch_scan(self, batch: jnp.ndarray
+                       ) -> Tuple[Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+                                  Optional[np.ndarray]]:
+        """Fault-tolerant scan dispatch. Returns ``(candidates, live)``:
+        ``live`` is ``None`` when the FT layer is inactive (the legacy
+        direct dispatch, bit-identical to before), else a bool [S] over
+        the pipeline's fault domains — False domains get masked to the
+        padding sentinel before the merge (partial results).
+
+        The loop is a synchronous, deterministic model of hedged
+        dispatch: per round, every unresolved domain is assigned a
+        replica via the health-aware ``ReplicaGroup.pick``; the chaos
+        injector (if armed) decides the replica's fate. A hang costs the
+        quantile-based hedge delay, then re-dispatches to the next
+        replica (a *hedge*); a transient error retries with backoff up
+        to ``max_retries`` before failing over; a crash fails over
+        immediately and ejects. In-process all replicas answer from the
+        same arrays, so the physical scan runs ONCE and a failover
+        re-serves bit-identical candidates — the control plane (who is
+        asked, when we give up, what latency is accounted and, under
+        ``FaultPlan.realtime``, slept) is what is modeled. Domains
+        still unresolved when the deadline is spent, or with every
+        replica ejected, are reported dead in ``live``."""
+        group = self.replicas
+        if group is None:
+            return self.pipeline.scan(batch), None
+        cfg = group.cfg
+        clock = group.clock
+        realtime = self.chaos is not None and self.chaos.plan.realtime
+        S = group.num_shards
+        flush_idx = self.stats.num_batches
+        stats = self.stats
+        tr = self.tracer
+        live = np.zeros(S, dtype=bool)
+        candidates = None
+        scan_s = 0.0
+        spent = 0.0                     # modeled elapsed across rounds
+        pending = set(range(S))
+        tried: List[set] = [set() for _ in range(S)]
+        retries = [0] * S
+        attempts = [0] * S
+        t_wall = clock()
+        # bounded by construction, belt-and-braces against plan bugs
+        guard = S * cfg.replicas * (cfg.max_retries + 2) + 4
+        while pending and guard > 0:
+            guard -= 1
+            assign = [(s, group.pick(s, exclude=tried[s]))
+                      for s in sorted(pending)]
+            assign = [(s, r) for s, r in assign if r is not None]
+            for s in pending - {s for s, _ in assign}:
+                tried[s] = set(range(cfg.replicas))   # no target: dead
+            pending = {s for s, _ in assign}
+            if not assign:
+                break
+            if candidates is None:
+                t0 = clock()
+                candidates = self.pipeline.scan(batch)
+                jax.block_until_ready(candidates)
+                scan_s = clock() - t0
+            hedge = group.hedge_delay_s()
+            round_cost = 0.0
+            for s, rid in assign:
+                attempts[s] += 1
+                fault = (self.chaos.outcome(flush_idx, s, rid,
+                                            attempts[s])
+                         if self.chaos is not None else None)
+                kind = fault.kind if fault is not None else None
+                if kind is None or kind == "slow":
+                    lat = scan_s + (fault.slow_s if fault else 0.0)
+                    if realtime and fault is not None:
+                        group.sleep(min(fault.slow_s, cfg.sleep_cap_s))
+                    late = (cfg.dispatch_deadline_s > 0.0 and
+                            spent + lat > cfg.dispatch_deadline_s)
+                    group.report(s, rid, "slow" if late else "ok",
+                                 latency_s=lat)
+                    if late:
+                        stats.ft_timeouts += 1   # late success: result
+                        #                          used, replica charged
+                    live[s] = True
+                    pending.discard(s)
+                elif kind == "hang":
+                    lat = hedge
+                    stats.ft_timeouts += 1
+                    stats.ft_hedges += 1
+                    group.report(s, rid, "timeout")
+                    tried[s].add(rid)
+                    if tr.enabled:
+                        tr.instant("retrieval.hedge", "retrieval",
+                                   args={"shard": s, "replica": rid,
+                                         "delay_us": hedge * 1e6})
+                    if realtime:
+                        group.sleep(min(hedge, cfg.sleep_cap_s))
+                elif kind == "error":
+                    lat = cfg.backoff_s * (2 ** retries[s])
+                    stats.ft_retries += 1
+                    group.report(s, rid, "error")
+                    retries[s] += 1
+                    if retries[s] > cfg.max_retries:
+                        tried[s].add(rid)
+                        retries[s] = 0
+                    if realtime and lat > 0:
+                        group.sleep(min(lat, cfg.sleep_cap_s))
+                else:  # crash: fail fast, eject, fail over
+                    lat = 0.0
+                    stats.ft_crashes += 1
+                    group.report(s, rid, "crash")
+                    tried[s].add(rid)
+                round_cost = max(round_cost, lat)
+            spent += round_cost
+            if self._degraded_partial:
+                break   # partial-retrieval rung: one attempt per domain
+            if cfg.dispatch_deadline_s > 0.0 and \
+                    spent >= cfg.dispatch_deadline_s:
+                break   # deadline spent: survivors only
+        stats.ft_dispatch.add(clock() - t_wall)
+        if not live.all() and not cfg.allow_partial:
+            dead = [int(s) for s in np.flatnonzero(~live)]
+            raise ScanHang(
+                f"fault domains {dead} unresolved past the deadline and "
+                "ServiceConfig.failover.allow_partial is False")
+        return candidates, live
+
+    def _fail_pending(self, pending: List[Tuple[_InFlight, jnp.ndarray]]
+                      ) -> None:
+        """A flush that raises must still complete its entries: fill the
+        missing-neighbor sentinel (``knnlm_interpolate`` degrades to the
+        bare LM distribution on it) and flag them partial, so handles
+        stay resolvable and the in-flight table cannot wedge — callers
+        that swallow the exception still drain cleanly."""
+        k = self.pipeline.k
+        for entry, _ in pending:
+            if entry.result_d is None:
+                entry.result_d = jnp.full((entry.nrows, k), jnp.inf,
+                                          jnp.float32)
+                entry.result_i = jnp.full((entry.nrows, k), -1, jnp.int32)
+                entry.partial = True
+                entry.live_frac = 0.0
+
     def flush(self) -> None:
         """Coalesce every pending row into one scan+merge dispatch and
         complete the corresponding in-flight entries."""
@@ -428,6 +661,14 @@ class RetrievalService:
             return
         pending, self._pending = self._pending, []
         nrows, self._pending_rows = self._pending_rows, 0
+        try:
+            self._flush_batch(pending, nrows)
+        except Exception:
+            self._fail_pending(pending)
+            raise
+
+    def _flush_batch(self, pending: List[Tuple[_InFlight, jnp.ndarray]],
+                     nrows: int) -> None:
 
         batch = (pending[0][1] if len(pending) == 1
                  else jnp.concatenate([q for _, q in pending], axis=0))
@@ -450,15 +691,38 @@ class RetrievalService:
         # NOTE: with measure=False the scan/merge spans time only the
         # async dispatch (jax returns before the kernel finishes); with
         # measure=True the block_until_ready makes them true stage times
+        # (the fault-tolerant dispatch always blocks: deadline/hedge
+        # decisions need the scan's real latency)
         with tr.span("retrieval.scan", "retrieval",
                      args={"rows": nrows} if tr.enabled else None):
-            candidates = self.pipeline.scan(batch)
-            if measure:
+            candidates, live = self._dispatch_scan(batch)
+            if measure and candidates is not None:
                 jax.block_until_ready(candidates)
         t1 = time.perf_counter()
+        partial = live is not None and not bool(live.all())
+        live_frac = float(live.mean()) if live is not None else 1.0
         with tr.span("retrieval.merge", "retrieval"):
-            dists, ids = self.pipeline.merge(candidates,
-                                             self.config.merge_fanout)
+            if not partial:
+                dists, ids = self.pipeline.merge(candidates,
+                                                 self.config.merge_fanout)
+            elif candidates is not None and bool(live.any()) and \
+                    candidates[0].ndim == 3 and \
+                    candidates[0].shape[0] == live.shape[0]:
+                # per-shard candidate lists: mask the dead producers to
+                # the (+inf, -1) padding sentinel, then the ordinary
+                # K-selection IS the exact top-k over the live subset
+                md, mi = merge_lib.mask_producers(
+                    candidates[0], candidates[1], jnp.asarray(live))
+                dists, ids = self.pipeline.merge(
+                    (md, mi), self.config.merge_fanout)
+            else:
+                # total loss (or an in-graph-merged pipeline whose one
+                # domain died): every row gets the missing-neighbor
+                # sentinel; knnlm_interpolate degrades to the bare LM
+                # distribution on it, so requests complete un-augmented
+                n, k = batch.shape[0], self.pipeline.k
+                dists = jnp.full((n, k), jnp.inf, jnp.float32)
+                ids = jnp.full((n, k), -1, jnp.int32)
             if measure:
                 jax.block_until_ready((dists, ids))
         if measure:
@@ -466,12 +730,25 @@ class RetrievalService:
             self.stats.merge.add(time.perf_counter() - t1)
         self.stats.record_batch(
             nrows, dispatches=getattr(self.pipeline, "scan_dispatches", 1))
+        if partial:
+            self.stats.ft_partial_flushes += 1
+            self.stats.ft_partial_rows += nrows
+            if tr.enabled:
+                tr.instant("retrieval.partial", "retrieval",
+                           args={"rows": nrows,
+                                 "live": int(live.sum()),
+                                 "domains": int(live.shape[0])})
 
         offset = 0
         for entry, q in pending:
+            entry.partial = partial
+            entry.live_frac = live_frac
             kd = dists[offset:offset + entry.kernel_rows]
             ki = ids[offset:offset + entry.kernel_rows]
-            if self.cache is not None:
+            if self.cache is not None and not partial:
+                # partial results never enter the cache: they would
+                # outlive the fault and silently serve degraded
+                # neighbors at full-quality lookups
                 self.cache.put_batch(np.asarray(q), np.asarray(kd),
                                      np.asarray(ki))
             if entry.stitch is not None:

@@ -118,6 +118,25 @@ class RetrievalStats:
         #                               residual retrieval time NOT
         #                               hidden behind decode
         self.spec_replay = StageStat()  # rollback + replay cost per event
+        # -- fault tolerance (replica failover / deadlines / chaos) ----
+        self.ft_timeouts = 0          # dispatches past the deadline: hung
+        #                               replicas AND late-but-used results
+        self.ft_hedges = 0            # hedged re-dispatches after a hang
+        #                               outlived the hedge delay
+        self.ft_retries = 0           # transient-error re-dispatches
+        #                               (retry-with-backoff)
+        self.ft_crashes = 0           # replica-crash outcomes observed
+        self.ft_ejections = 0         # health transitions into `ejected`
+        self.ft_recoveries = 0        # probation -> healthy transitions
+        self.ft_partial_flushes = 0   # flushes that served a live subset
+        self.ft_partial_rows = 0      # query rows in those flushes (the
+        #                               recall-proxy accounting: each row's
+        #                               top-k covered only live domains)
+        self.ft_spec_flushed = 0      # speculation points settled against
+        #                               a partial (timed-out) real search
+        self.ft_dispatch = StageStat()  # wall time of the fault-tolerant
+        #                               dispatch loop per flush (scan +
+        #                               failover + hedging)
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
         self._active_s = 0.0          # accumulated busy window (gaps
@@ -213,5 +232,17 @@ class RetrievalStats:
                 rollback_rate=self.spec_rollback_rate(),
                 spec_wait=self.spec_wait.summary(),
                 spec_replay=self.spec_replay.summary(),
+            ),
+            fault=dict(
+                timeouts=self.ft_timeouts,
+                hedges=self.ft_hedges,
+                retries=self.ft_retries,
+                crashes=self.ft_crashes,
+                ejections=self.ft_ejections,
+                recoveries=self.ft_recoveries,
+                partial_flushes=self.ft_partial_flushes,
+                partial_rows=self.ft_partial_rows,
+                spec_flushed=self.ft_spec_flushed,
+                dispatch=self.ft_dispatch.summary(),
             ),
         )

@@ -122,6 +122,10 @@ class RalmRequest:
     on_token: Optional[Callable[[int, np.ndarray], None]] = None
     cancelled: bool = False
     times: RequestTiming = dataclasses.field(default_factory=RequestTiming)
+    partial_steps: int = 0               # decode steps served from a
+    #                                      partial (live-subset) retrieval
+    #                                      result — the per-request quality
+    #                                      accounting of fault degradation
 
 
 @dataclasses.dataclass
@@ -133,6 +137,9 @@ class RalmResponse:
     tenant: str = "default"
     cancelled: bool = False
     times: Optional[RequestTiming] = None
+    partial_steps: int = 0               # steps decoded on partial
+    #                                      retrieval results (0 = full
+    #                                      quality throughout)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +209,22 @@ class EngineConfig:
     #                                      trace-event JSON
     trace_path: Optional[str] = None     # where RalmEngine.write_trace()
     #                                      saves the trace by default
+    retrieval_deadline_s: float = 0.0    # per-dispatch retrieval latency
+    #                                      budget: a fault domain still
+    #                                      unresolved past it is dropped
+    #                                      and the flush serves the exact
+    #                                      top-k over the survivors
+    #                                      (0 = wait indefinitely)
+    hedge_quantile: float = 0.95         # latency quantile after which a
+    #                                      hung dispatch is hedged to
+    #                                      another replica
+    shard_replicas: int = 1              # dispatch-target replicas per
+    #                                      retrieval fault domain; > 1 (or
+    #                                      a deadline/chaos plan) arms the
+    #                                      fault-tolerant dispatch layer
+    chaos_plan: Optional[str] = None     # path to a FaultPlan JSON to arm
+    #                                      at the service's scan boundary
+    #                                      (deterministic fault injection)
     attn_seq_block: int = 16             # KV-pool seq-axis alignment:
     #                                      per-wave attention reads crop
     #                                      to this quantum (kv_len), so

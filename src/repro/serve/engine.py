@@ -542,13 +542,34 @@ class RalmEngine:
                     "disabling speculation.", RuntimeWarning,
                     stacklevel=2)
                 speculate_k = 0
+            ft_wanted = (config.shard_replicas > 1 or
+                         config.retrieval_deadline_s > 0.0 or
+                         config.chaos_plan is not None)
+            if ft_wanted and not config.async_retrieval:
+                import warnings
+                warnings.warn(
+                    "EngineConfig retrieval fault-tolerance knobs "
+                    "(shard_replicas / retrieval_deadline_s / chaos_plan) "
+                    "require async_retrieval=True (the dispatch loop "
+                    "lives in the RetrievalService) — ignoring them.",
+                    RuntimeWarning, stacklevel=2)
             if config.async_retrieval:
+                from repro.retrieval.replica import FailoverConfig
                 from repro.retrieval.service import ServiceConfig
+                failover = None
+                if ft_wanted:
+                    failover = FailoverConfig(
+                        replicas=max(1, config.shard_replicas),
+                        dispatch_deadline_s=config.retrieval_deadline_s,
+                        hedge_quantile=config.hedge_quantile)
                 retriever = datastore.async_retriever(
                     search_cfg, query_proj=query_proj,
                     service_cfg=ServiceConfig(
                         cache_entries=config.retrieval_cache,
-                        measure=config.retrieval_measure))
+                        measure=config.retrieval_measure,
+                        failover=failover))
+                if config.chaos_plan is not None:
+                    retriever.service.install_chaos(config.chaos_plan)
             else:
                 retriever = datastore.retriever(search_cfg,
                                                 query_proj=query_proj)
@@ -739,6 +760,8 @@ class RalmEngine:
             if search is not None:
                 t0 = time.time()
                 dists, ids = search.result()
+                if getattr(search, "partial", False):
+                    seq.request.partial_steps += 1
                 if self.times is not None:
                     dists.block_until_ready()
                     self.times.search_s.append(time.time() - t0)
@@ -885,14 +908,19 @@ class RalmEngine:
                         self.times.search_s.append(time.time() - t0)
                 else:                              # pre-sliced sync batch
                     dists, ids = search
+                partial = getattr(search, "partial", False)
+                if partial:
+                    seq.request.partial_steps += 1
                 if seq.request.trace is not None:
                     seq.request.trace.append(
                         dict(step=seq.step, ids=np.asarray(ids)))
                 if rag.mode == "knnlm":
                     knn.append((len(rows), logits, dists, ids))
-                    if self.speculate_k > 0:
+                    if self.speculate_k > 0 and not partial:
                         # a non-speculated due row still refreshes the
-                        # seed the NEXT due step speculates with
+                        # seed the NEXT due step speculates with (a
+                        # partial result would seed speculation with
+                        # degraded neighbors — keep the last full set)
                         seq.last_neighbors = (dists, ids)
                 elif rag.mode == "retro" and self.cfg.arch == "encdec":
                     retro.append((seq, ids))
@@ -1070,11 +1098,23 @@ class RalmEngine:
                     stats.spec_landed += 1
             jax.block_until_ready([x for pair in res for x in pair])
             stats.spec_wait.add(time.perf_counter() - t0)
+            partials = [getattr(p.handle, "partial", False)
+                        for _, _, p in pts]
+            for (_, seq, _), part in zip(pts, partials):
+                if part:
+                    # the real search timed out into a partial result:
+                    # the point still settles (verify math below runs on
+                    # the degraded neighbors, so verification can never
+                    # hang on a dead shard), but the result is not a
+                    # speculation seed
+                    stats.ft_spec_flushed += 1
+                    seq.request.partial_steps += 1
             if not self.speculate_verify:
                 # trust-the-stale mode: adopt the real neighbors as the
                 # next seed, never compare, never roll back
-                for (_, seq, _), (d, i) in zip(pts, res):
-                    seq.last_neighbors = (d, i)
+                for (_, seq, _), (d, i), part in zip(pts, res, partials):
+                    if not part:
+                        seq.last_neighbors = (d, i)
                 return
             # ONE batched interpolate + argmax + host sync over every
             # point being verified this wave; this math is NOT counted
@@ -1093,7 +1133,7 @@ class RalmEngine:
                 jnp.concatenate([p.emitted[:, 0] for _, _, p in pts]))
             off = 0
             rolled: set = set()
-            for (idx, seq, p), (d, i) in zip(pts, res):
+            for (idx, seq, p), (d, i), part in zip(pts, res, partials):
                 B = p.logits.shape[0]
                 corrected = nxt_cat[off:off + B]
                 emitted = emit_cat[off:off + B]
@@ -1105,7 +1145,8 @@ class RalmEngine:
                     stats.spec_discarded += 1
                     continue
                 stats.spec_verified += 1
-                seq.last_neighbors = (d, i)
+                if not part:
+                    seq.last_neighbors = (d, i)
                 if seq.request.trace is not None:
                     # the REAL retrieval for this step — same entry the
                     # baseline records (acceptance is token equality,

@@ -17,6 +17,10 @@ baseline config:
     level 0   baseline                       (nprobe0, interval0, kNN on)
     level 1.. nprobe0/2, /4, ... min_nprobe  (cheaper scans)
     level  +1 interval0 * interval_factor    (retrieve less often)
+    level  +1 partial-retrieval              (serve the live fault-domain
+                                              subset, no hedges/retries —
+                                              only with a fault-tolerant
+                                              RetrievalService)
     level  +1 kNN off                        (rag.mode = "none")
 
 The step loop calls ``observe(queue_depth)`` once per wave; sustained
@@ -60,10 +64,16 @@ class DegradeLevel:
     nprobe: int
     interval: int
     knn: bool                     # False = retrieval fully off
+    partial: bool = False         # "partial-retrieval" rung: the
+    #                               fault-tolerant dispatch gives every
+    #                               domain ONE attempt and serves the
+    #                               live subset — no hedges, retries, or
+    #                               tail waits (needs service.replicas)
 
     def as_dict(self) -> Dict[str, object]:
         return dict(name=self.name, nprobe=self.nprobe,
-                    interval=self.interval, knn=self.knn)
+                    interval=self.interval, knn=self.knn,
+                    partial=self.partial)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +85,9 @@ class DegradeConfig:
     recovery: int = 20            # calm ticks before stepping back up
     min_nprobe: int = 1           # floor of the nprobe rungs
     interval_factor: int = 4      # widen rag.interval by this much
+    partial_rung: bool = True     # include the partial-retrieval rung
+    #                               (skipped when the engine's service
+    #                               has no fault-tolerant dispatch layer)
     knn_off_rung: bool = True     # include the final retrieval-off rung
 
 
@@ -120,6 +133,13 @@ class DegradePolicy:
         ladder.append(DegradeLevel(
             name=f"interval x{self.config.interval_factor}",
             nprobe=ladder[-1].nprobe, interval=widened, knn=True))
+        if self.config.partial_rung and self._service_replicas():
+            # cheaper than knn-off: keep retrieving, but serve whatever
+            # fault domains answer on the first attempt (exact top-k
+            # over the live subset) instead of hedging into the tail
+            ladder.append(DegradeLevel(
+                name="partial-retrieval", nprobe=ladder[-1].nprobe,
+                interval=widened, knn=True, partial=True))
         if self.config.knn_off_rung:
             ladder.append(DegradeLevel(
                 name="knn-off", nprobe=ladder[-1].nprobe,
@@ -138,6 +158,17 @@ class DegradePolicy:
         if service is not None:
             return service.pipeline.cfg
         return getattr(ret, "cfg", None)
+
+    def _service(self):
+        ret = self.engine.retriever
+        return getattr(ret, "service", None) if ret is not None else None
+
+    def _service_replicas(self) -> bool:
+        """Whether the deployed service has the fault-tolerant dispatch
+        layer (the partial-retrieval rung is meaningless without it)."""
+        service = self._service()
+        return service is not None and \
+            getattr(service, "replicas", None) is not None
 
     def _set_nprobe(self, nprobe: int) -> None:
         ret = self.engine.retriever
@@ -175,6 +206,10 @@ class DegradePolicy:
         cfg = self._pipeline_cfg()
         changed = changed or (cfg is not None and level.nprobe > 0
                               and cfg.nprobe != level.nprobe)
+        service = self._service()
+        if service is not None and \
+                getattr(service, "_degraded_partial", False) != level.partial:
+            changed = True
         if changed:
             # in-flight speculation points were issued under the OLD
             # quality: force-verify them with the math they speculated
@@ -187,6 +222,10 @@ class DegradePolicy:
             self.engine.rag = dataclasses.replace(
                 rag, interval=level.interval, mode=new_mode)
         self._set_nprobe(level.nprobe)
+        if service is not None:
+            set_partial = getattr(service, "set_degraded_partial", None)
+            if set_partial is not None:
+                set_partial(level.partial)
 
     # -- the per-wave tick --------------------------------------------------
 

@@ -587,6 +587,12 @@ class Gateway:
         service = getattr(eng.retriever, "service", None)
         if service is not None:
             out["retrieval"] = service.stats.snapshot()
+            replicas = getattr(service, "replicas", None)
+            if replicas is not None:
+                out["retrieval"]["fault"]["replicas"] = replicas.snapshot()
+        straggler = getattr(self.scheduler, "straggler_events", None)
+        if straggler is not None:
+            out["scheduler"]["straggler_waves"] = straggler
         out["metrics"] = self.metrics.snapshot()
         return out
 

@@ -43,6 +43,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
 
+from repro.runtime.fault_tolerance import StragglerMonitor
 from repro.serve.api import RalmRequest, RalmResponse
 
 if TYPE_CHECKING:  # avoid a circular import; the engine owns its scheduler
@@ -62,6 +63,13 @@ class RalmScheduler:
         self.active: list = []
         self._next_id = 0
         self._issued: set = set()
+        # wave-duration outlier detection (rolling-median rule from
+        # repro.runtime.fault_tolerance, reused verbatim): a wave that
+        # takes >2x the recent median usually means a retrieval stall
+        # or a KV-pool growth — worth a counter + a trace instant
+        self.straggler = StragglerMonitor(threshold=2.0, window=32)
+        self.straggler_events = 0
+        self._wave_idx = 0
 
     # ------------------------------------------------------------------
     def submit(self, request: RalmRequest) -> int:
@@ -197,6 +205,7 @@ class RalmScheduler:
         span per wave, so a Perfetto timeline shows decode / search /
         finish as adjacent slices of each step."""
         tr = self.engine.tracer
+        t_wave = time.perf_counter()
         with tr.span("sched.step", "wave",
                      args={"active": len(self.active)}
                      if tr.enabled else None):
@@ -214,6 +223,8 @@ class RalmScheduler:
                 self.engine.flush_searches()
             with tr.span("wave.finish", "wave"):
                 self.engine.finish_wave(self.active, decoded, searches)
+        if self.active:
+            self._record_wave(time.perf_counter() - t_wave)
         finished: List[RalmResponse] = []
         still_active = []
         for seq in self.active:
@@ -230,6 +241,24 @@ class RalmScheduler:
         self.active = still_active
         return finished
 
+    def _record_wave(self, duration_s: float) -> None:
+        """Feed one wave's wall time into the straggler monitor; an
+        outlier (>threshold x the rolling median — the monitor needs a
+        few waves of history first) bumps the counter the metrics
+        adapter exports and drops a trace instant."""
+        self._wave_idx += 1
+        event = self.straggler.record(self._wave_idx, duration_s)
+        if event is None:
+            return
+        self.straggler_events += 1
+        tr = self.engine.tracer
+        if tr.enabled:
+            tr.instant("sched.straggler", "wave",
+                       args={"wave": event.step,
+                             "duration_ms": event.duration * 1e3,
+                             "median_ms": event.median * 1e3,
+                             "ratio": event.ratio})
+
     @staticmethod
     def _response(seq) -> RalmResponse:
         seq.request.times.finish = time.perf_counter()
@@ -239,7 +268,8 @@ class RalmScheduler:
             steps=seq.step, trace=seq.request.trace,
             tenant=seq.request.tenant,
             cancelled=seq.request.cancelled,
-            times=seq.request.times)
+            times=seq.request.times,
+            partial_steps=seq.request.partial_steps)
 
     def run(self) -> List[RalmResponse]:
         """Drain the queue: step until nothing is queued or active."""

@@ -1,0 +1,667 @@
+"""Fault-tolerant retrieval dispatch under deterministic chaos.
+
+The contract under test (docs/retrieval.md "Failure modes and
+recovery"): the serving stack must survive a misbehaving vector-search
+tier — replica crashes fail over, hangs hedge to a sibling after the
+latency-quantile delay, transient errors retry, and a whole fault
+domain going dark degrades to *exact top-k over the survivors* instead
+of wedging the decode loop. All of it must be provably inert on the
+happy path: with the FT layer armed but no faults injected, results
+are bit-identical to the legacy direct dispatch and every fault
+counter is zero.
+
+Faults cannot happen for real in CI, so they are *injected* at the
+scan boundary by a seeded ``FaultPlan`` (repro.retrieval.chaos) whose
+outcomes are a pure function of (plan, flush, domain, replica,
+attempt) — the seed matrix below (hang / crash / slow x local / router
+pipeline) is the CI chaos-smoke job.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as tf
+from repro.retrieval import (ChaosInjector, FailoverConfig, FaultPlan,
+                             FaultSpec, ReplicaGroup, RetrievalService,
+                             ScanHang, ServiceConfig, crash_plan)
+from repro.retrieval.replica import (EJECTED, HEALTHY, PROBATION,
+                                     SUSPECT)
+from repro.serve import (DatastoreBuilder, EngineConfig, RagConfig,
+                         RalmEngine, RalmRequest)
+from repro.serve.gateway import DegradeConfig, DegradePolicy
+
+
+@pytest.fixture(scope="module")
+def tiny_ralm():
+    """Tiny decoder LM + 2-shard datastore over the deterministic-bigram
+    corpus (token t -> (3t+1) mod 64) — two shards = two retrieval
+    fault domains, the smallest world where partial results differ
+    from total loss."""
+    cfg = dataclasses.replace(get_arch("dec_s").reduced, vocab_size=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, 64, size=(64,))
+    corpus = [start]
+    for _ in range(31):
+        corpus.append((3 * corpus[-1] + 1) % 64)
+    corpus = np.stack(corpus, axis=1).astype(np.int32)
+    ds = DatastoreBuilder(dim=cfg.d_model, nlist=8, m=8, list_cap=512,
+                          num_shards=2).from_corpus(params, cfg, corpus)
+    ccfg = ds.search_config(nprobe=4, k=8, backend="ref")
+    rag = RagConfig(mode="knnlm", interval=1, k=8, lam=0.999,
+                    temperature=1.0)
+    return cfg, params, corpus, ds, ccfg, rag
+
+
+def _queries(ds, n=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, ds.index_cfg.dim))
+                       .astype(np.float32))
+
+
+def _svc(ds, ccfg, failover=None, chaos=None, **cfg_kw):
+    svc = RetrievalService.local(
+        ds.params, ds.shards, ccfg,
+        ServiceConfig(measure=False, failover=failover, **cfg_kw))
+    if chaos is not None:
+        svc.install_chaos(chaos)
+    return svc
+
+
+def _search(svc, q):
+    h = svc.submit(q)
+    svc.flush()
+    d, i = h.result()
+    return np.asarray(d), np.asarray(i), h
+
+
+#: FailoverConfig for failover tests: the long probation keeps a
+#: faulted replica benched, so the surviving one serves deterministically
+_NO_COMEBACK = FailoverConfig(replicas=2, probation_s=999.0)
+
+
+# ---------------------------------------------------------------------------
+# replica health state machine (fake clock, no service)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_health_state_machine_walk():
+    """healthy -> suspect -> ejected -> (cool-off) probation ->
+    recovered; a probation failure re-ejects; a crash ejects from any
+    state instantly."""
+    clk = _Clock()
+    trans = []
+    g = ReplicaGroup(1, FailoverConfig(
+        replicas=2, suspect_after=1, eject_after=3, probation_s=1.0,
+        probation_successes=2), clock=clk,
+        on_transition=lambda s, r, old, new: trans.append((old, new)))
+    h = g.health[(0, 0)]
+    g.report(0, 0, "timeout")
+    assert h.state == SUSPECT
+    g.report(0, 0, "timeout")
+    g.report(0, 0, "timeout")
+    assert h.state == EJECTED and g.ejections == 1
+    assert g.pick(0, exclude={1}) is None      # cool-off not served
+    clk.t = 1.5
+    assert g.pick(0, exclude={1}) == 0         # probe resumes traffic
+    assert h.state == PROBATION
+    g.report(0, 0, "ok")
+    assert h.state == PROBATION                # needs 2 successes
+    g.report(0, 0, "ok")
+    assert h.state == HEALTHY and g.recoveries == 1
+    # probation failure: straight back to ejected
+    g.report(0, 0, "error")
+    g.report(0, 0, "error")
+    g.report(0, 0, "error")
+    clk.t = 3.0
+    g.pick(0, exclude={1})
+    g.report(0, 0, "error")
+    assert h.state == EJECTED
+    # crash ejects instantly, from any state
+    h2 = g.health[(0, 1)]
+    g.report(0, 1, "crash")
+    assert h2.state == EJECTED
+    assert (HEALTHY, SUSPECT) in trans and (SUSPECT, EJECTED) in trans
+    assert (PROBATION, HEALTHY) in trans
+
+
+def test_pick_routes_and_probes():
+    clk = _Clock()
+    g = ReplicaGroup(1, FailoverConfig(replicas=2, probation_s=1.0,
+                                       probe_every=4), clock=clk)
+    # healthy round-robin alternates (first pick is replicas[1])
+    assert [g.pick(0) for _ in range(4)] == [1, 0, 1, 0]
+    # an ejected replica is excluded until its cool-off is served,
+    # then the probe cadence diverts traffic to it
+    g.report(0, 0, "crash")
+    assert all(g.pick(0) == 1 for _ in range(6))
+    clk.t = 2.0
+    picks = [g.pick(0) for _ in range(8)]
+    assert 0 in picks and g.health[(0, 0)].state == PROBATION
+    # suspects are also revisited on the cadence — a single timeout
+    # must not bench a replica forever while its sibling is healthy
+    g2 = ReplicaGroup(1, FailoverConfig(replicas=2, probe_every=2),
+                      clock=clk)
+    g2.report(0, 0, "timeout")
+    assert g2.health[(0, 0)].state == SUSPECT
+    assert 0 in [g2.pick(0) for _ in range(4)]
+
+
+def test_hedge_delay_and_validation():
+    g = ReplicaGroup(2, FailoverConfig(replicas=2, hedge_floor_s=0.005,
+                                       hedge_quantile=0.5))
+    assert g.hedge_delay_s() == 0.005          # cold reservoir: floor
+    for _ in range(64):
+        g.latency.add(0.02)
+    assert g.hedge_delay_s() == pytest.approx(0.02, rel=0.05)
+    with pytest.raises(ValueError, match="replica"):
+        ReplicaGroup(0, FailoverConfig())
+    with pytest.raises(ValueError, match="unknown outcome"):
+        g.report(0, 0, "meh")
+
+
+# ---------------------------------------------------------------------------
+# chaos plans: determinism + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor")
+    with pytest.raises(ValueError, match="p must"):
+        FaultSpec(kind="hang", p=1.5)
+
+
+def test_chaos_outcomes_deterministic():
+    plan = FaultPlan.make(
+        [FaultSpec(kind="crash", shard=0, start_flush=2, stop_flush=4),
+         FaultSpec(kind="slow", p=0.5, slow_s=0.01)], seed=11)
+    a, b = ChaosInjector(plan), ChaosInjector(plan)
+    grid = [(f, s, r, t) for f in range(8) for s in range(2)
+            for r in range(2) for t in range(2)]
+    out_a = [a.outcome(*g) for g in grid]
+    out_b = [b.outcome(*g) for g in grid]
+    assert out_a == out_b                      # pure function of the plan
+    assert a.counts() == b.counts()
+    # rule order: the narrow crash rule wins inside its window
+    assert a.outcome(2, 0, 0, 0).kind == "crash"
+    assert a.outcome(4, 0, 0, 0) is None or \
+        a.outcome(4, 0, 0, 0).kind == "slow"   # window closed
+    # p=0.5 really splits, and the attempt index is part of the key
+    hits = [a.outcome(f, 1, 0, 0) for f in range(64)]
+    frac = sum(o is not None for o in hits) / 64
+    assert 0.2 < frac < 0.8
+    assert any((a.outcome(f, 1, 0, 0) is None) !=
+               (a.outcome(f, 1, 0, 1) is None) for f in range(64))
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan.make(
+        [FaultSpec(kind="hang", shard=1, replica=0, start_flush=3),
+         FaultSpec(kind="error", p=0.25)], seed=42, realtime=True)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    assert FaultPlan.load(path) == plan
+    obj = json.loads(plan.to_json())           # the --chaos surface
+    assert obj["seed"] == 42 and len(obj["faults"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# service-level dispatch: inertness, failover, hedging, partials
+# ---------------------------------------------------------------------------
+
+def test_ft_layer_inert_without_faults(tiny_ralm):
+    """FT armed but fault-free == legacy direct dispatch, bit for bit,
+    with every fault counter zero."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    q = _queries(ds)
+    d0, i0, _ = _search(_svc(ds, ccfg), q)
+    svc = _svc(ds, ccfg, failover=FailoverConfig(replicas=2))
+    d1, i1, h = _search(svc, q)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(i0, i1)
+    assert not h.partial and h.live_fraction == 1.0
+    st = svc.stats
+    assert (st.ft_timeouts == st.ft_hedges == st.ft_retries ==
+            st.ft_crashes == st.ft_ejections == st.ft_recoveries ==
+            st.ft_partial_flushes == st.ft_partial_rows == 0)
+
+
+@pytest.mark.parametrize("kind,counter", [
+    ("crash", "ft_crashes"), ("hang", "ft_hedges"),
+    ("error", "ft_retries")])
+def test_replica_fault_fails_over_full_quality(tiny_ralm, kind, counter):
+    """One replica of every domain faults on the first pick (RR starts
+    at replica 1): the dispatch fails over / hedges / retries to the
+    sibling and serves bit-identical full-quality results."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    q = _queries(ds)
+    d0, i0, _ = _search(_svc(ds, ccfg), q)
+    plan = FaultPlan.make([FaultSpec(kind=kind, replica=1)])
+    svc = _svc(ds, ccfg, failover=_NO_COMEBACK, chaos=plan)
+    d1, i1, h = _search(svc, q)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(i0, i1)
+    assert not h.partial
+    assert getattr(svc.stats, counter) >= 1
+    assert svc.stats.ft_partial_flushes == 0
+
+
+def test_hang_keeps_hedging_until_ejection(tiny_ralm):
+    """A persistently hanging replica is not benched-forever in
+    SUSPECT: the probe cadence keeps revisiting it, each visit hedges,
+    and the failure streak reaches ejection."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    plan = FaultPlan.make([FaultSpec(kind="hang", replica=0)])
+    svc = _svc(ds, ccfg, failover=FailoverConfig(
+        replicas=2, probation_s=999.0, probe_every=2), chaos=plan)
+    q = _queries(ds, n=2)
+    for _ in range(16):
+        _search(svc, q)
+    st = svc.stats
+    assert st.ft_hedges >= 4 and st.ft_timeouts >= 4
+    assert st.ft_ejections == 2                # one per domain
+    assert svc.replicas.state_counts()[EJECTED] == 2
+    assert st.ft_partial_flushes == 0          # sibling always covered
+
+
+def test_shard_down_serves_exact_prefix_over_survivors(tiny_ralm):
+    """Both replicas of domain 0 crash: the flush serves the truncated
+    top-k' of the surviving shard — the first k'(S) columns equal the
+    exact single-shard search, the tail is the (+inf, -1) padding
+    sentinel — and the partial accounting fires."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    q = _queries(ds)
+    svc = _svc(ds, ccfg, failover=_NO_COMEBACK,
+               chaos=crash_plan(shard=0, replica=-1))
+    d1, i1, h = _search(svc, q)
+    assert h.partial and h.live_fraction == 0.5
+    dr, ir, _ = _search(RetrievalService.local(
+        ds.params, [ds.shards[1]], ccfg, ServiceConfig(measure=False)), q)
+    kk = ccfg.k_prime(2)                       # survivor contributes k'
+    np.testing.assert_array_equal(i1[:, :kk], ir[:, :kk])
+    np.testing.assert_allclose(d1[:, :kk], dr[:, :kk], rtol=1e-5)
+    assert (i1[:, kk:] == -1).all() and np.isinf(d1[:, kk:]).all()
+    st = svc.stats
+    assert st.ft_crashes == 2 and st.ft_ejections == 2
+    assert st.ft_partial_flushes == 1
+    assert st.ft_partial_rows == q.shape[0]
+
+
+def test_total_loss_sentinel_then_recovery(tiny_ralm):
+    """Every replica of every domain crashes for a window: the flush
+    serves the all-sentinel result (knnlm degrades to the bare LM on
+    it) instead of raising; after the window the probation machine
+    restores full-quality service and counts the recoveries."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    q = _queries(ds, n=2)
+    d0, i0, _ = _search(_svc(ds, ccfg), q)
+    plan = crash_plan(shard=-1, replica=-1, start=0, stop=2)
+    svc = _svc(ds, ccfg, failover=FailoverConfig(
+        replicas=2, probation_s=0.0, probation_successes=1,
+        probe_every=2), chaos=plan)
+    d1, i1, h = _search(svc, q)                # flush 0: total loss
+    assert h.partial and h.live_fraction == 0.0
+    assert (i1 == -1).all() and np.isinf(d1).all()
+    for _ in range(4):                         # flushes past the window
+        d2, i2, h2 = _search(svc, q)
+    np.testing.assert_array_equal(d2, d0)
+    np.testing.assert_array_equal(i2, i0)
+    assert not h2.partial
+    assert svc.stats.ft_recoveries >= 2        # both domains healed
+    assert svc.replicas.state_counts()[EJECTED] == 0
+
+
+def test_allow_partial_false_raises_but_never_wedges(tiny_ralm):
+    """allow_partial=False surfaces total loss as ScanHang — but the
+    in-flight table must still drain: the failed entries resolve to the
+    sentinel, num_inflight returns to zero (the flush-raise leak
+    regression)."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    svc = _svc(ds, ccfg,
+               failover=FailoverConfig(replicas=1, allow_partial=False),
+               chaos=crash_plan(replica=-1))
+    h = svc.submit(_queries(ds, n=2))
+    with pytest.raises(ScanHang):
+        svc.flush()
+    assert h.done()                            # sentinel-filled, not stuck
+    d, i = h.result()
+    assert (np.asarray(i) == -1).all() and h.partial
+    assert svc.num_inflight == 0
+
+
+def test_degraded_partial_sheds_the_tail(tiny_ralm):
+    """The degrade ladder's partial-retrieval rung: one attempt per
+    domain, no hedging into the tail — a hanging first pick turns into
+    an immediate partial; clearing the rung restores failover."""
+    _, _, _, ds, ccfg, _ = tiny_ralm
+    plan = FaultPlan.make([FaultSpec(kind="hang", replica=1)])
+    svc = _svc(ds, ccfg, failover=_NO_COMEBACK, chaos=plan)
+    svc.set_degraded_partial(True)
+    q = _queries(ds, n=2)
+    d, i, h = _search(svc, q)                  # both domains: 1 hang each
+    assert h.partial
+    assert svc.stats.ft_hedges == 2            # exactly one round
+    svc.set_degraded_partial(False)
+    d2, i2, h2 = _search(svc, q)               # hedges to the sibling
+    assert not h2.partial
+
+
+# ---------------------------------------------------------------------------
+# engine-level seed matrix (the CI chaos-smoke scenarios)
+# ---------------------------------------------------------------------------
+
+def _engine(tiny, failover=None, chaos=None, spec_k=0):
+    cfg, params, _, ds, ccfg, rag = tiny
+    ret = ds.async_retriever(ccfg, service_cfg=ServiceConfig(
+        measure=False, failover=failover))
+    if chaos is not None:
+        ret.service.install_chaos(chaos)
+    return RalmEngine.monolithic(params, cfg, rag, retriever=ret,
+                                 speculate_k=spec_k)
+
+
+def _run(eng, corpus, steps=8, n=2):
+    done = []
+    for i in range(n):
+        eng.submit(RalmRequest(
+            prompt=jnp.asarray(corpus[2 * i:2 * i + 2, :4]), steps=steps))
+    done += eng.run()
+    return done
+
+
+@pytest.mark.parametrize("kind,seed", [
+    ("hang", 0), ("crash", 0), ("slow", 7)])
+def test_chaos_seed_matrix_token_parity(tiny_ralm, kind, seed):
+    """Replica-level faults (the sibling always covers) must be
+    invisible in the emitted tokens: greedy parity with a fault-free
+    FT-off engine, zero partial steps, and the matching counter fires."""
+    corpus = tiny_ralm[2]
+    base = _run(_engine(tiny_ralm), corpus)
+    plan = FaultPlan.make(
+        [FaultSpec(kind=kind, replica=1, start_flush=2,
+                   p=0.5 if kind == "slow" else 1.0,
+                   slow_s=0.001 if kind == "slow" else 0.0)], seed=seed)
+    eng = _engine(tiny_ralm, failover=_NO_COMEBACK, chaos=plan)
+    out = _run(eng, corpus)
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+    assert all(r.partial_steps == 0 for r in out)
+    st = eng.retriever.service.stats
+    assert st.ft_partial_flushes == 0
+    counter = dict(hang=st.ft_hedges, crash=st.ft_crashes,
+                   slow=st.ft_timeouts + st.ft_hedges + st.ft_crashes)
+    if kind != "slow":                         # slow w/o deadline: benign
+        assert counter[kind] >= 1
+
+
+def test_shard_outage_degrades_and_recovers_tokens(tiny_ralm):
+    """Whole-domain outage mid-stream (sequential requests, so the
+    flush window maps cleanly onto requests): every request still
+    completes, the affected steps are counted per-request via
+    partial_steps, and requests after the outage window return to
+    baseline tokens."""
+    corpus = tiny_ralm[2]
+
+    def serve(eng):
+        done = []
+        for i in range(3):
+            eng.submit(RalmRequest(
+                prompt=jnp.asarray(corpus[2 * i:2 * i + 2, :4]), steps=8))
+            done += eng.run()
+        return done
+
+    base = serve(_engine(tiny_ralm))
+    plan = FaultPlan.make(
+        [FaultSpec(kind="crash", shard=0, start_flush=4, stop_flush=12)])
+    eng = _engine(tiny_ralm, failover=FailoverConfig(
+        replicas=2, probation_s=0.0, probation_successes=1,
+        probe_every=2), chaos=plan)
+    out = serve(eng)
+    assert len(out) == 3                       # zero failed requests
+    st = eng.retriever.service.stats
+    assert st.ft_partial_flushes > 0
+    # one request per wave: per-request step accounting == flush count
+    assert sum(r.partial_steps for r in out) == st.ft_partial_flushes
+    assert out[0].partial_steps > 0 and out[-1].partial_steps == 0
+    assert st.ft_recoveries >= 1
+    # the last request runs entirely after the window: tokens recover
+    np.testing.assert_array_equal(np.asarray(base[-1].tokens),
+                                  np.asarray(out[-1].tokens))
+
+
+def test_chaos_seed_matrix_router_pipeline():
+    """The router (distributed) pipeline is ONE fault domain: a crashed
+    or hung replica fails over to its sibling with bit-identical
+    results; losing every replica degrades to the total-loss sentinel
+    instead of raising. Subprocess: the mesh needs 8 fake devices."""
+    import pathlib
+    import subprocess
+    import sys
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = dict(PYTHONPATH=src, PATH="/usr/bin:/bin", HOME="/tmp",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core.ivfpq import *
+from repro.core.chamvs import ChamVSConfig
+from repro.retrieval import (FailoverConfig, FaultPlan, FaultSpec,
+                             RetrievalService, ServiceConfig, ShardRouter)
+key = jax.random.PRNGKey(0)
+cfg_i = IVFPQConfig(dim=64, nlist=64, m=8, list_cap=128)
+vecs = jax.random.normal(key, (8192, 64))
+params = train_ivfpq(key, vecs[:4096], cfg_i, kmeans_iters=6)
+shards = build_shards(params, np.asarray(vecs), cfg_i, num_shards=4)
+cfg = ChamVSConfig(ivfpq=cfg_i, nprobe=16, k=20, backend="ref")
+q = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+
+def svc(failover=None, plan=None):
+    mesh = make_mesh((4, 2), ("data", "model"))
+    router = ShardRouter(mesh, cfg, db_axes=("data",), query_axis="model")
+    s = RetrievalService.distributed(router, params, shards,
+                                     ServiceConfig(bucket_pow2=False,
+                                                   failover=failover))
+    if plan is not None:
+        s.install_chaos(plan)
+    return s
+
+def search(s):
+    h = s.submit(q); s.flush()
+    d, i = h.result()
+    return np.asarray(d), np.asarray(i), h
+
+assert svc().pipeline.fault_domains == 1
+d0, i0, _ = search(svc())
+fo = FailoverConfig(replicas=2, probation_s=999.0)
+for kind in ("crash", "hang"):
+    plan = FaultPlan.make([FaultSpec(kind=kind, replica=1)])
+    d1, i1, h = search(svc(fo, plan))
+    assert np.array_equal(d0, d1) and np.array_equal(i0, i1), kind
+    assert not h.partial, kind
+d2, i2, h2 = search(svc(fo, FaultPlan.make(
+    [FaultSpec(kind="crash", replica=-1)])))
+assert h2.partial and h2.live_fraction == 0.0
+assert (i2 == -1).all() and np.isinf(d2).all()
+print("ROUTER_CHAOS_OK")
+"""
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=540, env=env)
+    assert p.returncode == 0, \
+        f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-3000:]}"
+    assert "ROUTER_CHAOS_OK" in p.stdout
+
+
+def test_speculation_survives_partial_results(tiny_ralm):
+    """Speculation x faults: a partial handle at harvest is flushed
+    (never seeds the next point), verification still settles every
+    point, and the run completes — no wedge, parity preserved outside
+    the outage."""
+    corpus = tiny_ralm[2]
+    plan = FaultPlan.make(
+        [FaultSpec(kind="crash", shard=0, start_flush=3, stop_flush=9)])
+    eng = _engine(tiny_ralm, failover=FailoverConfig(
+        replicas=2, probation_s=0.0, probation_successes=1,
+        probe_every=2), chaos=plan, spec_k=1)
+    out = _run(eng, corpus, n=2, steps=10)
+    assert len(out) == 2
+    st = eng.retriever.service.stats
+    assert st.ft_partial_flushes > 0
+    assert st.spec_issued > 0
+    assert st.spec_accepted + st.spec_rollbacks == st.spec_verified
+    assert eng.retriever.service.num_inflight == 0
+    assert eng.pool.num_used == 0
+
+
+# ---------------------------------------------------------------------------
+# leak regression: cancel mid-search under speculation
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_wave_releases_everything(tiny_ralm):
+    """A client disconnect mid-decode with speculation in flight must
+    retire every in-flight search and return the KV slots: after the
+    drain, num_inflight == 0 and the pool is empty."""
+    corpus = tiny_ralm[2]
+    eng = _engine(tiny_ralm, spec_k=1)
+    rid = eng.submit(RalmRequest(prompt=jnp.asarray(corpus[0:2, :4]),
+                                 steps=12))
+    eng.submit(RalmRequest(prompt=jnp.asarray(corpus[4:6, :4]), steps=12))
+    done = []
+    for _ in range(3):
+        done += eng.step()
+    assert any(seq.spec_points for seq in eng.scheduler.active)
+    assert eng.scheduler.cancel(rid)
+    done += eng.run()
+    by_id = {r.request_id: r for r in done}
+    assert by_id[rid].cancelled
+    svc = eng.retriever.service
+    assert svc.num_inflight == 0
+    assert eng.pool.num_used == 0
+    assert eng.spec_stats.spec_discarded >= 1
+
+
+# ---------------------------------------------------------------------------
+# degrade ladder: the partial-retrieval rung
+# ---------------------------------------------------------------------------
+
+def test_ladder_includes_partial_rung_only_with_replicas(tiny_ralm):
+    cfg, params, _, ds, ccfg, rag = tiny_ralm
+    eng_ft = _engine(tiny_ralm, failover=FailoverConfig(replicas=2))
+    names = [lv.name for lv in DegradePolicy(eng_ft).ladder]
+    assert "partial-retrieval" in names
+    assert names.index("partial-retrieval") < names.index("knn-off")
+    eng_plain = _engine(tiny_ralm)
+    names_plain = [lv.name for lv in DegradePolicy(eng_plain).ladder]
+    assert "partial-retrieval" not in names_plain
+    # and it can be configured away
+    names_off = [lv.name for lv in DegradePolicy(
+        eng_ft, DegradeConfig(partial_rung=False)).ladder]
+    assert "partial-retrieval" not in names_off
+
+
+def test_ladder_walk_sets_and_clears_partial_mode(tiny_ralm):
+    """Sustained pressure walks nprobe -> interval -> partial-retrieval
+    (service enters single-attempt mode); sustained calm walks back up
+    and clears it; the recovered level reproduces baseline tokens."""
+    corpus = tiny_ralm[2]
+    eng = _engine(tiny_ralm, failover=FailoverConfig(replicas=2))
+    base = _run(_engine(tiny_ralm), corpus)
+    pol = DegradePolicy(eng, DegradeConfig(patience=1, recovery=1,
+                                           high_watermark=4,
+                                           low_watermark=1))
+    svc = eng.retriever.service
+    partial_idx = [lv.name for lv in pol.ladder].index("partial-retrieval")
+    walked = []
+    while pol.level < partial_idx:
+        assert pol.observe(queue_depth=100)
+        walked.append(pol.ladder[pol.level].name)
+    assert svc._degraded_partial
+    assert pol.ladder[pol.level].partial
+    assert walked[0].startswith("nprobe") and "interval" in walked[-2]
+    down = pol.transitions_down
+    while pol.level > 0:
+        assert pol.observe(queue_depth=0)
+    assert not svc._degraded_partial
+    assert pol.transitions_down == down and pol.transitions_up == down
+    out = _run(eng, corpus)                    # recovered level: parity
+    for a, b in zip(base, out):
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog + metrics plane
+# ---------------------------------------------------------------------------
+
+def test_wave_straggler_watchdog(tiny_ralm):
+    """The scheduler feeds per-wave wall time into the shared
+    StragglerMonitor: an outlier wave (>2x the rolling median) bumps
+    the counter the metrics adapter exports."""
+    eng = _engine(tiny_ralm)
+    sched = eng.scheduler
+    for _ in range(6):
+        sched._record_wave(0.010)
+    assert sched.straggler_events == 0
+    sched._record_wave(0.100)
+    assert sched.straggler_events == 1
+    sched._record_wave(0.011)                  # normal waves stay quiet
+    assert sched.straggler_events == 1
+
+
+def test_fault_metrics_families(tiny_ralm):
+    from repro.obs import MetricsRegistry, bind_engine_metrics
+    corpus = tiny_ralm[2]
+    eng = _engine(tiny_ralm, failover=_NO_COMEBACK,
+                  chaos=crash_plan(replica=1))
+    _run(eng, corpus, n=1, steps=4)
+    eng.scheduler._record_wave(0.01)
+    reg = MetricsRegistry()
+    bind_engine_metrics(reg, eng)
+    text = reg.render()
+    assert 'ralm_retrieval_fault_total{kind="crash"}' in text
+    assert 'ralm_retrieval_fault_total{kind="partial_flush"}' in text
+    assert 'ralm_retrieval_fault_replicas{state="ejected"}' in text
+    assert "ralm_retrieval_fault_dispatch_seconds" in text
+    assert "ralm_wave_straggler_total" in text
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig / launcher wiring
+# ---------------------------------------------------------------------------
+
+def test_engine_config_arms_fault_tolerance(tiny_ralm, tmp_path):
+    cfg, params, _, ds, ccfg, rag = tiny_ralm
+    path = str(tmp_path / "plan.json")
+    crash_plan(replica=1).save(path)
+    econfig = EngineConfig(model=cfg, rag=rag, async_retrieval=True,
+                           shard_replicas=2, retrieval_deadline_s=0.05,
+                           hedge_quantile=0.9, chaos_plan=path)
+    eng = RalmEngine.from_config(econfig, params, ds, ccfg)
+    svc = eng.retriever.service
+    assert svc.replicas is not None
+    assert svc.replicas.cfg.replicas == 2
+    assert svc.replicas.cfg.dispatch_deadline_s == 0.05
+    assert svc.replicas.cfg.hedge_quantile == 0.9
+    assert svc.chaos is not None
+    assert svc.chaos.plan.faults[0].kind == "crash"
+
+
+def test_engine_config_ft_requires_async_retrieval(tiny_ralm):
+    cfg, params, _, ds, ccfg, rag = tiny_ralm
+    econfig = EngineConfig(model=cfg, rag=rag, async_retrieval=False,
+                           shard_replicas=2)
+    with pytest.warns(RuntimeWarning, match="async_retrieval"):
+        eng = RalmEngine.from_config(econfig, params, ds, ccfg)
+    assert getattr(eng.retriever, "service", None) is None
